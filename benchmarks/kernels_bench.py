@@ -1,0 +1,89 @@
+"""Kernel micro-benchmarks (jnp reference path on CPU — wall-clock here is
+indicative only; the Pallas kernels target TPU and are validated in
+interpret mode).  Derived columns report the structural quantities that
+matter on TPU: HBM bytes per call and arithmetic intensity."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, n=5) -> float:
+    fn()().block_until_ready() if callable(fn()) else None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn()
+        jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def kernel_benchmarks() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    for m, k, n in [(512, 512, 512), (1024, 1024, 1024)]:
+        x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        s = jnp.asarray(rng.uniform(0.01, 0.1, (n,)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        f = jax.jit(lambda x, w, s, b: ref.int_matmul_ref(x, w, s, b))
+        us = _timeit(lambda: f(x, w, s, b))
+        flops = 2 * m * k * n
+        byts = m * k + k * n + m * n * 4
+        rows.append((f"int_matmul_{m}x{k}x{n}", us,
+                     f"flops={flops};bytes={byts};"
+                     f"ai={flops / byts:.1f}"))
+
+    for n_thr in (15, 255):
+        x = jnp.asarray(rng.integers(-2000, 2000, (4096, 512)), jnp.int32)
+        thr = jnp.asarray(np.sort(rng.integers(-1500, 1500,
+                                               (n_thr, 512)), 0), jnp.int32)
+        f = jax.jit(lambda x, t: ref.multithreshold_ref(x, t))
+        us = _timeit(lambda: f(x, thr))
+        byts = x.size * 4 + thr.size * 4 + x.size
+        rows.append((f"multithreshold_N{n_thr}", us,
+                     f"bytes={byts};cmp_per_elem={n_thr}"))
+        f2 = jax.jit(lambda x, t: ref.multithreshold_searchsorted_ref(x, t))
+        us2 = _timeit(lambda: f2(x, thr))
+        rows.append((f"multithreshold_bisect_N{n_thr}", us2,
+                     f"bytes={byts};cmp_per_elem={int(np.log2(n_thr + 1))}"))
+
+    x = jnp.asarray(rng.normal(size=(4096, 512)), jnp.float32)
+    s = jnp.asarray(rng.uniform(0.01, 0.1, (512,)), jnp.float32)
+    z = jnp.zeros((512,), jnp.float32)
+    f = jax.jit(lambda x, s, z: ref.quantize_ref(x, s, z))
+    us = _timeit(lambda: f(x, s, z))
+    rows.append(("quantize_4096x512", us,
+                 f"bytes={x.size * 4 + x.size}"))
+
+    # fused vs unfused layer tail (the §5.2/§5.3 comparison, TPU economics)
+    acc = jnp.asarray(rng.integers(-4000, 4000, (8192, 512)), jnp.int32)
+    scale = jnp.asarray(rng.uniform(0.001, 0.01, (512,)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+
+    def composite(acc):
+        y = acc.astype(jnp.float32) * scale + bias          # Mul+Add
+        y = jax.nn.relu(y)                                  # Max
+        y = y / 0.1                                         # out-quant Div
+        return jnp.clip(jnp.round(y), 0, 15).astype(jnp.int8)
+
+    thr = jnp.asarray(np.sort(rng.integers(-3000, 3000, (15, 512)), 0),
+                      jnp.int32)
+
+    def fused(acc):
+        return ref.multithreshold_ref(acc, thr)
+
+    us_c = _timeit(lambda: jax.jit(composite)(acc))
+    us_f = _timeit(lambda: jax.jit(fused)(acc))
+    rows.append(("layer_tail_composite", us_c, "passes=5_ops"))
+    rows.append(("layer_tail_thresholding", us_f,
+                 f"passes=1;speedup_vs_composite={us_c / us_f:.2f}x"))
+    return rows

@@ -1,0 +1,41 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro-
+benchmarks.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks.paper_tables import (f22_accumulators, f23_crossover,
+                                         t1_qat_scales, t3_worked_example,
+                                         t4_elementwise_model, t6_workloads,
+                                         t7_layer_tails)
+    from benchmarks.kernels_bench import kernel_benchmarks
+
+    suites = [
+        ("t1", t1_qat_scales),
+        ("t3", t3_worked_example),
+        ("t4", t4_elementwise_model),
+        ("t6", t6_workloads),
+        ("t7", t7_layer_tails),
+        ("f22", f22_accumulators),
+        ("f23", f23_crossover),
+        ("kernels", kernel_benchmarks),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for tag, fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{tag}_FAILED,0,{traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

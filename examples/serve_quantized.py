@@ -1,0 +1,48 @@
+"""Batched serving with the SIRA-optimized integer path: int8 packed
+weights + int8 scaled-integer KV cache, compared to the bf16 baseline.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.quant.quantizer import pack_weights_int8
+from repro.serve import Request, ServingEngine
+
+
+def main() -> None:
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(8,)),
+                    max_new_tokens=16) for _ in range(4)]
+
+    eng_fp = ServingEngine(model, params, batch_slots=4, max_seq=64)
+    t0 = time.time()
+    out_fp = eng_fp.generate(reqs)
+    t_fp = time.time() - t0
+
+    params_q = pack_weights_int8(params, min_size=64)
+    eng_q = ServingEngine(model, params_q, batch_slots=4, max_seq=64)
+    t0 = time.time()
+    out_q = eng_q.generate(reqs)
+    t_q = time.time() - t0
+
+    agree = np.mean([a == b for fa, fb in zip(out_fp, out_q)
+                     for a, b in zip(fa, fb)])
+    print(f"bf16 serving:  {t_fp:.2f}s  tokens: {out_fp[0][:8]}")
+    print(f"int8 serving:  {t_q:.2f}s  tokens: {out_q[0][:8]}")
+    print(f"greedy token agreement: {agree:.0%}")
+    print("(int8 weights halve HBM weight traffic on TPU; with the int8 "
+          "KV cache the decode memory term drops ~57% — EXPERIMENTS.md "
+          "§Perf)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end QAT training driver example: train a reduced assigned arch
+with w8a8 fake-quant for a few hundred steps, with checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_qat.py            # ~2 min on CPU
+    PYTHONPATH=src python examples/train_qat.py --steps 300 --arch glm4-9b
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "qwen2-1.5b", "--reduced", "--steps", "200",
+                "--batch", "8", "--seq", "64", "--quant-bits", "8",
+                "--ckpt-dir", "/tmp/repro_qat_ckpt", "--ckpt-every", "100"]
+    # user args override defaults
+    known = {a for a in args if a.startswith("--")}
+    merged = list(args)
+    i = 0
+    while i < len(defaults):
+        if defaults[i] not in known:
+            merged.append(defaults[i])
+            if i + 1 < len(defaults) and not defaults[i + 1].startswith("--"):
+                merged.append(defaults[i + 1])
+                i += 1
+        elif i + 1 < len(defaults) and not defaults[i + 1].startswith("--"):
+            i += 1
+        i += 1
+    raise SystemExit(main(merged))

@@ -1,0 +1,16 @@
+"""repro: SIRA (scaled-integer range analysis) as a production JAX framework.
+
+Subpackages:
+  core     — the paper's contribution (SIRA analysis + FDNA optimizations)
+  quant    — quantization substrate (QAT/PTQ quantizers)
+  kernels  — Pallas TPU kernels (int matmul, multithreshold, quantize)
+  models   — LM model zoo (dense/GQA, MoE, SSM, hybrid)
+  configs  — assigned architecture configs
+  data     — deterministic synthetic data pipeline
+  optim    — AdamW optimizer
+  train    — training loop, checkpointing, fault tolerance
+  serve    — batched serving engine
+  launch   — mesh, dry-run, train/serve drivers
+  roofline — roofline analysis from compiled artifacts
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""SIRA core: scaled-integer range analysis and FDNA-style optimizations."""
+from .intervals import ScaledIntRange                      # noqa: F401
+from .graph import Graph, Node, quant_bounds               # noqa: F401
+from .propagate import SIRA, analyze, POISON               # noqa: F401
+from .streamline import (streamline, aggregate_scales_biases,   # noqa: F401
+                         explicitize_quantizers, remove_identity_ops)
+from .thresholds import (convert_tails_to_thresholds,      # noqa: F401
+                         find_layer_tails, extract_thresholds)
+from .accumulator import (minimize_accumulators, datatype_bound_bits,  # noqa: F401
+                          sira_bits, summarize, accumulator_dtype,
+                          exact_worst_case_bits)
+from . import costmodel                                    # noqa: F401
+from .verify import verify_ranges, instrument, stuck_channels  # noqa: F401

@@ -1,0 +1,169 @@
+"""Accumulator minimization with SIRA (paper §4.2).
+
+Two bounds for the accumulator width of an integer MatMul/Conv:
+
+  * **Datatype bound** (Colbert et al., reproduced): for a K-dim dot product
+    of N-bit unsigned inputs with M-bit signed weights,
+
+        P = ceil(alpha + phi(alpha) + 1),
+        alpha = log2(K) + N + M - 1,  phi(a) = log2(1 + 2^-a)
+
+  * **SIRA bound**: from the interval-arithmetic output range [z_lo, z_hi]
+    of the integer kernel,
+
+        P = ceil(log2(max(|z_lo|, |z_hi| + 1))) + 1
+
+The SIRA bound exploits the *actual trained weights* and is provably
+lossless; on the paper's workloads it is on average 22% below the datatype
+bound (validated in benchmarks/f22_accumulators.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .graph import Graph
+from .intervals import ScaledIntRange
+from .propagate import analyze
+
+
+def datatype_bound_bits(K: int, input_bits: int, weight_bits: int,
+                        input_signed: bool = False) -> int:
+    """Colbert et al. datatype-bound accumulator width (paper §4.2).
+
+    ``input_bits``-bit (default unsigned) inputs, ``weight_bits``-bit signed
+    weights, K-element dot product."""
+    N = input_bits if not input_signed else input_bits  # magnitude bits incl.
+    alpha = np.log2(K) + N + weight_bits - 1
+    phi = np.log2(1.0 + 2.0 ** (-alpha))
+    return int(np.ceil(alpha + phi + 1))
+
+
+def exact_worst_case_bits(K: int, x_lo: int, x_hi: int,
+                          w_lo: int, w_hi: int) -> int:
+    """Exact worst-case accumulator width from integer operand ranges
+    (independent of trained values, tighter than the log-sum formula for
+    asymmetric ranges)."""
+    prods = [x_lo * w_lo, x_lo * w_hi, x_hi * w_lo, x_hi * w_hi]
+    z_lo, z_hi = K * min(prods), K * max(prods)
+    m = max(abs(z_lo), abs(z_hi) + 1)
+    return int(np.ceil(np.log2(max(m, 2)))) + 1
+
+
+def sira_bits(r: ScaledIntRange) -> int:
+    return r.required_signed_bits()
+
+
+@dataclasses.dataclass
+class AccumulatorReport:
+    node_name: str
+    op_type: str
+    K: int
+    sira_bits: int
+    datatype_bits: int
+    baseline_bits: int = 32
+
+    @property
+    def reduction_vs_datatype(self) -> float:
+        return 1.0 - self.sira_bits / self.datatype_bits
+
+    @property
+    def reduction_vs_baseline(self) -> float:
+        return 1.0 - self.sira_bits / self.baseline_bits
+
+
+def _weight_value(g: Graph, tensor: str) -> Optional[np.ndarray]:
+    """Resolve a weight tensor to its constant value, looking through a
+    residual Mul(q_W, s) if the region was not fully aggregated."""
+    if g.is_constant(tensor):
+        return g.initializers[tensor]
+    prod = g.producer(tensor)
+    if prod is not None and prod.op_type == "Mul" and \
+            all(g.is_constant(t) for t in prod.inputs):
+        return g.initializers[prod.inputs[0]] * g.initializers[prod.inputs[1]]
+    return None
+
+
+def _dot_length(g: Graph, node) -> int:
+    if node.op_type in ("MatMul", "Gemm"):
+        for t in node.inputs[:2]:
+            w = _weight_value(g, t)
+            if w is not None:
+                return int(w.shape[0])
+        return 0
+    if node.op_type == "Conv":
+        w = _weight_value(g, node.inputs[1])
+        if w is None:
+            return 0
+        cout, cin_g, kh, kw = w.shape
+        return int(cin_g * kh * kw)
+    return 0
+
+
+def minimize_accumulators(g: Graph,
+                          input_ranges: Dict[str, ScaledIntRange],
+                          input_bits: int = 8,
+                          weight_bits: int = 8,
+                          ranges: Optional[Dict[str, ScaledIntRange]] = None
+                          ) -> List[AccumulatorReport]:
+    """Analyze every integer MatMul/Conv in a (streamlined) graph and report
+    SIRA vs datatype-bound accumulator widths."""
+    if ranges is None:
+        ranges = analyze(g, input_ranges)
+    reports: List[AccumulatorReport] = []
+    for node in g.nodes:
+        if node.op_type not in ("MatMul", "Gemm", "Conv"):
+            continue
+        r_out = ranges.get(node.outputs[0])
+        if r_out is None or not r_out.is_scaled_int:
+            continue
+        # integer kernel requires *pure integer* inputs (scale 1, bias 0)
+        rs_in = [ranges.get(t) for t in node.inputs[:2]]
+        if any(x is None or not x.is_scaled_int or
+               not (np.all(x.scale == 1.0) and np.all(x.bias == 0.0))
+               for x in rs_in):
+            continue
+        K = _dot_length(g, node)
+        if K == 0:
+            continue
+        # per-input bitwidths: from the actual integer ranges if available
+        def _bits(r, signed_default):
+            try:
+                if np.min(r.int_lo) >= 0:
+                    return r.required_unsigned_bits(), False
+                return r.required_signed_bits(), True
+            except AssertionError:
+                return (input_bits, signed_default)
+        dyn = rs_in[0] if not rs_in[0].is_point else rs_in[1]
+        wgt = rs_in[1] if not rs_in[1].is_point else rs_in[0]
+        n_bits, _ = _bits(dyn, False)
+        m_bits, _ = _bits(wgt, True)
+        reports.append(AccumulatorReport(
+            node_name=node.name, op_type=node.op_type, K=K,
+            sira_bits=sira_bits(r_out),
+            datatype_bits=datatype_bound_bits(K, n_bits, m_bits)))
+    return reports
+
+
+def summarize(reports: List[AccumulatorReport]) -> Dict[str, float]:
+    if not reports:
+        return dict(mean_sira=0.0, mean_datatype=0.0,
+                    reduction_vs_datatype=0.0, reduction_vs_32b=0.0)
+    mu_s = float(np.mean([r.sira_bits for r in reports]))
+    mu_d = float(np.mean([r.datatype_bits for r in reports]))
+    return dict(mean_sira=mu_s, mean_datatype=mu_d,
+                reduction_vs_datatype=1.0 - mu_s / mu_d,
+                reduction_vs_32b=1.0 - mu_s / 32.0)
+
+
+def accumulator_dtype(bits: int):
+    """TPU adaptation: map an exact SIRA bitwidth to the accumulation dtype
+    used by the Pallas integer matmul kernel (DESIGN.md §2)."""
+    import jax.numpy as jnp
+    if bits <= 15:
+        return jnp.int16
+    if bits <= 31:
+        return jnp.int32
+    return jnp.int64

@@ -1,0 +1,247 @@
+"""Converting quantized layer tails to thresholds (paper §4.1.3, Fig 11).
+
+The multi-threshold function
+
+    f_T(x) = out_bias + out_scale * sum_i (x >= T_i)
+
+replaces an entire *layer tail*: the chain of elementwise ops (aggregated
+scale/bias, monotonic activation) terminating in a uniform quantizer.  We
+implement the paper's extraction — evaluate the tail subgraph end-to-end
+over the SIRA-provided integer input range and pick up the steps with an
+edge-detection convolution — plus a beyond-paper *bisection* extractor that
+finds each threshold by binary search (O(N log R) instead of O(R) subgraph
+evaluations), used automatically for wide accumulator ranges.
+
+Exactness contract (Eq. 3): for integer inputs within the SIRA range, the
+MultiThreshold output equals the original tail output exactly.  This is
+enforced by tests (exhaustively for small ranges).
+
+Note on Eq. 2: the paper's sign-bias expression has an off-by-one typo; we
+use ``out_bias = qmin`` (the count runs over N = qmax - qmin thresholds),
+which is exact for signed/unsigned and narrow/wide ranges alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .graph import Graph, Node, fresh_name, quant_bounds
+from .intervals import ScaledIntRange
+from .propagate import analyze
+
+# elementwise ops allowed inside a layer tail (dynamic input at slot 0,
+# other inputs constant)
+TAIL_ELEMENTWISE = {"Mul", "Add", "Sub", "Div", "Relu", "Sigmoid", "Tanh",
+                    "Softcap", "Silu", "Gelu", "Clip", "Identity"}
+
+# enumeration cutoff: above this range size, use bisection extraction
+EDGE_DETECT_MAX_RANGE = 1 << 16
+
+
+@dataclasses.dataclass
+class LayerTail:
+    quant_node: Node
+    nodes: List[Node]          # tail nodes, topo order, quant included
+    input_tensor: str          # integer tensor entering the tail
+    channel_axis: int
+
+
+def find_layer_tails(g: Graph,
+                     ranges: Dict[str, ScaledIntRange]) -> List[LayerTail]:
+    """Anchor at each final Quant and walk upwards through elementwise ops
+    until reaching an integer (scale-1, bias-0 scaled-int) tensor."""
+    g.toposort()
+    tails: List[LayerTail] = []
+    claimed: set = set()
+    for node in reversed(g.nodes):
+        if node.op_type != "Quant" or node.name in claimed:
+            continue
+        chain: List[Node] = [node]
+        cur = node.inputs[0]
+        ok = True
+        while True:
+            r = ranges.get(cur)
+            if r is not None and r.is_scaled_int and \
+                    np.all(r.scale == 1.0) and np.all(r.bias == 0.0):
+                break  # integer entry point found
+            prod = g.producer(cur)
+            if prod is None or prod.op_type not in TAIL_ELEMENTWISE:
+                ok = False
+                break
+            if len(g.consumers(cur)) != 1:
+                ok = False  # branching inside the tail — unsupported
+                break
+            if any(not g.is_constant(t) for t in prod.inputs[1:]):
+                ok = False
+                break
+            chain.append(prod)
+            cur = prod.inputs[0]
+        if not ok or len(chain) < 1:
+            continue
+        r = ranges.get(cur)
+        if r is None or not r.is_scaled_int:
+            continue
+        prod = g.producer(cur)
+        axis = 1 if (prod is not None and prod.op_type == "Conv") else -1
+        for n in chain:
+            claimed.add(n.name)
+        tails.append(LayerTail(quant_node=node,
+                               nodes=list(reversed(chain)),
+                               input_tensor=cur, channel_axis=axis))
+    return tails
+
+
+# --------------------------------------------------------------------------
+# tail evaluation
+# --------------------------------------------------------------------------
+
+def _tail_subgraph(g: Graph, tail: LayerTail) -> Graph:
+    sub = Graph(inputs=[tail.input_tensor],
+                outputs=[tail.quant_node.outputs[0]])
+    sub.nodes = [Node(n.op_type, list(n.inputs), list(n.outputs),
+                      dict(n.attrs), name=n.name) for n in tail.nodes]
+    for n in sub.nodes:
+        for t in n.inputs:
+            if g.is_constant(t):
+                sub.initializers[t] = g.initializers[t]
+    return sub
+
+
+def _tail_params_channels(g: Graph, tail: LayerTail) -> int:
+    """Number of channels = finest granularity among tail parameters
+    (paper: 'the finest granularity of any of the fused operators')."""
+    C = 1
+    for n in tail.nodes:
+        for t in n.inputs[1:]:
+            if g.is_constant(t):
+                C = max(C, int(np.size(g.initializers[t])))
+    return C
+
+
+def _eval_tail(sub: Graph, xs: np.ndarray, C: int, axis: int) -> np.ndarray:
+    """Evaluate the tail for a column of inputs per channel.
+
+    xs: (R,) integer inputs; returns (R, C) outputs."""
+    if axis == -1:
+        x = np.broadcast_to(xs[:, None], (xs.size, C))
+        y = sub.execute({sub.inputs[0]: x})[sub.outputs[0]]
+        return y.reshape(xs.size, C)
+    # channels-first (Conv): shape (1, C, R, 1) then move back
+    x = np.broadcast_to(xs[None, None, :, None], (1, C, xs.size, 1))
+    y = sub.execute({sub.inputs[0]: x})[sub.outputs[0]]
+    return np.moveaxis(y.reshape(C, xs.size), 0, 1)
+
+
+@dataclasses.dataclass
+class ThresholdSpec:
+    thresholds: np.ndarray     # (C, N) ascending
+    out_scale: float
+    out_bias: float
+    n_steps: int
+
+
+def extract_thresholds(g: Graph, tail: LayerTail,
+                       ranges: Dict[str, ScaledIntRange],
+                       method: str = "auto") -> ThresholdSpec:
+    r_in = ranges[tail.input_tensor]
+    lo = int(np.floor(np.min(r_in.int_lo)))
+    hi = int(np.ceil(np.max(r_in.int_hi)))
+    qn = tail.quant_node
+    bits = int(g.initializers[qn.inputs[3]])
+    signed = bool(qn.attrs.get("signed", 1))
+    narrow = bool(qn.attrs.get("narrow", 0))
+    qmin, qmax = quant_bounds(bits, signed, narrow)
+    s_q = float(np.asarray(g.initializers[qn.inputs[1]]).reshape(-1)[0])
+    z_q = float(np.asarray(g.initializers[qn.inputs[2]]).reshape(-1)[0])
+    N = int(qmax - qmin)
+
+    sub = _tail_subgraph(g, tail)
+    C = _tail_params_channels(g, tail)
+
+    def f_int(xs: np.ndarray) -> np.ndarray:
+        """Integer output level (count + qmin) for integer inputs."""
+        y = _eval_tail(sub, xs.astype(np.float64), C, tail.channel_axis)
+        lev = np.round(y / s_q + z_q)
+        return lev
+
+    if method == "auto":
+        method = "edge" if (hi - lo) <= EDGE_DETECT_MAX_RANGE else "bisect"
+
+    if method == "edge":
+        xs = np.arange(lo, hi + 1, dtype=np.int64)
+        levels = f_int(xs)                        # (R, C)
+        steps = np.diff(levels, axis=0)           # edge detection kernel [-1,1]
+        if np.any(steps < -1e-9):
+            raise ValueError("layer tail is not monotonic — cannot threshold")
+        thr = np.full((C, N), float(hi + 1))      # +inf proxy (right pad)
+        for c in range(C):
+            stc = np.rint(steps[:, c]).astype(np.int64)
+            t_list = np.repeat(xs[1:], stc)       # threshold at each unit step
+            # left-pad: f(lo) above qmin ⇒ thresholds below the range (−inf
+            # proxy: any value ≤ all in-range inputs)
+            n_left = int(round(levels[0, c] - qmin))
+            t_full = np.concatenate([np.full(n_left, float(lo)), t_list])
+            t_full = t_full[:N]
+            thr[c, :t_full.size] = t_full
+    else:  # bisection (beyond-paper; exact for monotonic tails)
+        # verify monotonicity on a coarse probe grid
+        probe = np.unique(np.linspace(lo, hi, 257).astype(np.int64))
+        lev_probe = f_int(probe)
+        if np.any(np.diff(lev_probe, axis=0) < -1e-9):
+            raise ValueError("layer tail is not monotonic — cannot threshold")
+        thr = np.full((C, N), float(hi + 1))
+        lev_lo = f_int(np.array([lo]))[0]          # (C,)
+        for c in range(C):
+            for j in range(N):
+                level = qmin + j + 1               # first x with f(x) >= level
+                if lev_lo[c] >= level:
+                    thr[c, j] = float(lo)          # −inf proxy
+                    continue
+                a, b = lo, hi + 1                  # invariant: f(a) < level
+                found = False
+                while a + 1 < b:
+                    m = (a + b) // 2
+                    if f_int(np.array([m]))[0, c] >= level:
+                        b = m
+                        found = True
+                    else:
+                        a = m
+                if found or (b <= hi and
+                             f_int(np.array([b]))[0, c] >= level):
+                    thr[c, j] = float(b)
+    # thresholds must be ascending per channel
+    thr = np.sort(thr, axis=1)
+    out_scale = s_q
+    out_bias = s_q * (qmin - z_q)
+    return ThresholdSpec(thresholds=thr, out_scale=out_scale,
+                         out_bias=out_bias, n_steps=N)
+
+
+def convert_tails_to_thresholds(
+        g: Graph, input_ranges: Dict[str, ScaledIntRange],
+        method: str = "auto") -> Tuple[Graph, List[ThresholdSpec]]:
+    """Replace every convertible layer tail with a MultiThreshold node."""
+    g = g.copy()
+    ranges = analyze(g, input_ranges)
+    tails = find_layer_tails(g, ranges)
+    specs: List[ThresholdSpec] = []
+    for tail in tails:
+        try:
+            spec = extract_thresholds(g, tail, ranges, method=method)
+        except ValueError:
+            continue  # non-monotonic tail: leave composite (paper §4.1.3)
+        out_t = tail.quant_node.outputs[0]
+        thr_name = g.add_initializer(spec.thresholds,
+                                     name=fresh_name("thresholds"))
+        for n in tail.nodes:
+            g.remove_node(n)
+        g.add_node("MultiThreshold", [tail.input_tensor, thr_name], [out_t],
+                   attrs=dict(axis=tail.channel_axis,
+                              out_scale=spec.out_scale,
+                              out_bias=spec.out_bias))
+        specs.append(spec)
+    g.toposort()
+    g.dead_code_eliminate()
+    return g, specs

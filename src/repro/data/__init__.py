@@ -1,0 +1,1 @@
+from .pipeline import TokenPipeline, DataState  # noqa: F401

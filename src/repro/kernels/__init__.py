@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the SIRA-optimized integer serving path."""
+from .ops import int_matmul, multithreshold, quantize  # noqa: F401
+from . import ref                                      # noqa: F401

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused flash attention (forward), GQA-aware.
+
+The roofline analysis (EXPERIMENTS.md §Perf) shows the jnp-level chunked
+attention is the dominant HBM term for train/prefill cells: every online-
+softmax intermediate (scores, exp, running max/denominator) is an HBM
+round-trip at the XLA level.  This kernel keeps the whole (bq × bk) score
+block in VMEM — HBM traffic collapses to Q/K/V reads + O writes, moving
+the attention layers from memory-bound to compute-bound (the hypothesis →
+measurement log lives in EXPERIMENTS.md).
+
+Grid: (batch·kv_heads·q_groups, Sq/bq); each program scans KV chunks with
+a fori_loop carrying (m, l, acc) in VMEM scratch.  Causal masking prunes
+fully-masked KV chunks via early iteration bounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
+               scale: float, causal: bool, logit_cap: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    n_k = sk // bk
+    # causal: KV chunks beyond the last query row are fully masked
+    last = jax.lax.div(((qi + 1) * bq - 1), bk) + 1 if causal else n_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)   # (bk, hd)
+        v = v_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        if causal:
+            k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, q.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, last, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal",
+                                             "logit_cap", "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, bq: int = 512, bk: int = 512,
+                        causal: bool = True, logit_cap: float = 0.0,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q (B, Sq, H, hd); k/v (B, Sk, KV, hd) with H = KV·g → out like q.
+
+    HBM traffic: read Q,K,V once; write O once.  Scores live in VMEM."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    scale = hd ** -0.5
+
+    # flatten (B, KV, g) into one grid axis; kv index = flat // g % KV
+    qf = q.reshape(B, Sq, KV, g, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV * g, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    kernel = functools.partial(_fa_kernel, bq=bq, bk=bk, sk=Sk,
+                               scale=scale, causal=causal,
+                               logit_cap=logit_cap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV * g, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda h, i: (h // g, 0, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda h, i: (h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV * g, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, KV, g, Sq, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, Sq, H, hd)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, logit_cap=0.0):
+    """Pure-jnp oracle (materialized softmax)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, Sq, KV, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qf, k.astype(jnp.float32))
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

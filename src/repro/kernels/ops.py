@@ -1,0 +1,64 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On TPU the Pallas path is used; elsewhere (this CPU container) the wrappers
+fall back to the jnp reference implementations, and the Pallas kernels are
+validated in interpret mode by the test suite.  ``use_pallas`` can be
+forced for interpret-mode execution.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .int_matmul import int_matmul as _int_matmul_pallas
+from .multithreshold import multithreshold as _multithreshold_pallas
+from .quantize import quantize as _quantize_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def int_matmul(x, w, scale=None, bias=None, *, acc_bits: int = 32,
+               out_dtype=None, use_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _int_matmul_pallas(
+            x, w, scale, bias, acc_bits=acc_bits, out_dtype=out_dtype,
+            interpret=bool(interpret if interpret is not None
+                           else not _on_tpu()))
+    return ref.int_matmul_ref(x, w, scale, bias, acc_bits=acc_bits,
+                              out_dtype=out_dtype)
+
+
+def multithreshold(x, thresholds, *, out_bias: int = 0, out_dtype=jnp.int8,
+                   use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _multithreshold_pallas(
+            x, thresholds, out_bias=out_bias, out_dtype=out_dtype,
+            interpret=bool(interpret if interpret is not None
+                           else not _on_tpu()))
+    return ref.multithreshold_ref(x, thresholds, out_bias=out_bias,
+                                  out_dtype=out_dtype)
+
+
+def quantize(x, scale, zero_point, *, qmin: int = -128, qmax: int = 127,
+             out_dtype=jnp.int8, use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _quantize_pallas(
+            x, scale, zero_point, qmin=qmin, qmax=qmax, out_dtype=out_dtype,
+            interpret=bool(interpret if interpret is not None
+                           else not _on_tpu()))
+    return ref.quantize_ref(x, scale, zero_point, qmin=qmin, qmax=qmax,
+                            out_dtype=out_dtype)

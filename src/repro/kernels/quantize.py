@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused activation quantization (scale → round → clip).
+
+One HBM pass from float activations to int8 — the Quant node of the
+streamlined graph (paper §3.2.1) with per-channel or per-tensor scales.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, scale_ref, zp_ref, o_ref, *, qmin: int, qmax: int,
+                  out_dtype):
+    x = x_ref[...]                        # (bm, bc) f32
+    s = scale_ref[...]                    # (1, bc)
+    z = zp_ref[...]                       # (1, bc)
+    q = jnp.round(x / s + z)
+    o_ref[...] = jnp.clip(q, qmin, qmax).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "bm", "bc",
+                                             "out_dtype", "interpret"))
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
+             *, qmin: int = -128, qmax: int = 127, out_dtype=jnp.int8,
+             bm: int = 256, bc: int = 128,
+             interpret: bool = False) -> jnp.ndarray:
+    """x (M, C) float; scale/zero_point (C,) or scalars."""
+    M, C = x.shape
+    bm, bc = min(bm, M), min(bc, C)
+    assert M % bm == 0 and C % bc == 0, \
+        f"shape ({M},{C}) not divisible by block ({bm},{bc})"
+    scale2 = jnp.broadcast_to(scale.astype(jnp.float32).reshape(1, -1),
+                              (1, C))
+    zp2 = jnp.broadcast_to(zero_point.astype(jnp.float32).reshape(1, -1),
+                           (1, C))
+    kernel = functools.partial(_quant_kernel, qmin=qmin, qmax=qmax,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, C // bc),
+        in_specs=[
+            pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, C), out_dtype),
+        interpret=interpret,
+    )(x, scale2, zp2)

@@ -1,0 +1,141 @@
+"""Parameter / state / input PartitionSpec assignment (DP x TP x EP).
+
+Rules are assigned by parameter path name, applied to the *last* dims so
+layer-stacking axes (scan) are untouched:
+
+  embed (V, d)            → ("model", None)      vocab-parallel
+  lm_head (d, V)          → (None, "model")
+  attn wq/wk/wv (d, Hh)   → (None, "model")      head-parallel
+  attn wo (Hh, d)         → ("model", None)
+  mlp w_gate/up (d, f)    → (None, "model")
+  mlp w_down (f, d)       → ("model", None)
+  moe experts (E, d, f)   → ("model", None, None) expert-parallel
+  mamba in_proj (d, p)    → (None, "model")
+  mamba out_proj (p, d)   → ("model", None)
+  conv_w (K, ch)          → (None, "model"); conv_b/bq/bk/bv → ("model",)
+  norms / scalars         → replicated
+
+Optimizer moments & master weights additionally shard their largest
+replicated dim over "data" (ZeRO-style) so 20B-param optimizer state fits
+per chip.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_RULES = [
+    ("embed", ("model", None)),
+    ("lm_head", (None, "model")),
+    ("wq", (None, "model")), ("wk", (None, "model")),
+    ("wv", (None, "model")),
+    ("wo", ("model", None)),
+    ("bq", ("model",)), ("bk", ("model",)), ("bv", ("model",)),
+    ("w_gate", (None, "model")), ("w_up", (None, "model")),
+    ("w_down", ("model", None)),
+    ("router", (None, None)),
+    ("in_proj", (None, "model")),
+    ("out_proj", ("model", None)),
+    ("conv_w", (None, "model")), ("conv_b", ("model",)),
+    ("norm_scale", (None,)),
+    ("A_log", (None,)), ("D", (None,)), ("dt_bias", (None,)),
+]
+
+_EXPERT_RULES = [
+    ("w_gate", ("model", None, None)), ("w_up", ("model", None, None)),
+    ("w_down", ("model", None, None)),
+]
+
+
+def _spec_for(path: str, ndim: int, in_experts: bool) -> P:
+    # int8-packed weights: {.../wq/q, .../wq/s} — rule on the parent name
+    if path.endswith("/q"):
+        path = path[:-2]
+    elif path.endswith("/s"):
+        return P(*((None,) * ndim))
+    rules = _EXPERT_RULES + _RULES if in_experts else _RULES
+    for key, tail in rules:
+        if path.endswith("/" + key) or path == key:
+            pad = (None,) * (ndim - len(tail))
+            return P(*(pad + tuple(tail)))
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(params: Any) -> Any:
+    """PartitionSpec pytree mirroring the params pytree."""
+    def walk(tree, path, in_experts):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + "/" + k,
+                            in_experts or k == "experts")
+                    for k, v in tree.items()}
+        return _spec_for(path, np.ndim(tree), in_experts)
+    return walk(params, "", False)
+
+
+def zero_shard(spec: P, shape) -> P:
+    """Additionally shard the largest None dim over 'data' (ZeRO-style),
+    for optimizer state."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, (s, n) in enumerate(zip(parts, shape)):
+        if s is None and n > best_size and n >= 16:
+            best, best_size = i, n
+    if best is not None:
+        parts[best] = "data"
+    return P(*parts)
+
+
+def opt_pspecs(params: Any, pspec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda p, s: zero_shard(s, np.shape(p)), params, pspec_tree)
+
+
+def filter_pspec_for_mesh(spec: P, mesh, shape=None) -> P:
+    """Drop axis names the mesh does not have (pod-less single mesh), and —
+    when ``shape`` is given — drop assignments that do not divide the dim
+    (XLA argument shardings require exact divisibility; the model pads
+    vocab/experts so the big tensors stay sharded, anything odd degrades
+    to replication)."""
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def f(s, dim):
+        if s is None:
+            return None
+        parts = s if isinstance(s, (tuple, list)) else (s,)
+        kept = tuple(a for a in parts if a in names)
+        if not kept:
+            return None
+        if dim is not None:
+            total = 1
+            for a in kept:
+                total *= sizes[a]
+            if dim % total != 0:
+                return None
+        return kept if len(kept) > 1 else kept[0]
+
+    dims = list(shape) + [None] * (len(spec) - len(shape)) \
+        if shape is not None else [None] * len(spec)
+    return P(*[f(s, d) for s, d in zip(spec, dims)])
+
+
+def named(mesh, spec_tree: Any, shape_tree: Any = None) -> Any:
+    """NamedSharding tree; pass the matching ShapeDtypeStruct tree to get
+    divisibility-guarded argument shardings."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, filter_pspec_for_mesh(s, mesh)),
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda s, a: NamedSharding(
+            mesh, filter_pspec_for_mesh(s, mesh, np.shape(a)
+                                        if not hasattr(a, "shape")
+                                        else a.shape)),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(ndim: int) -> P:
+    return P(("pod", "data"), *((None,) * (ndim - 1)))

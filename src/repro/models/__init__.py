@@ -1,0 +1,4 @@
+"""LM model zoo: dense/GQA, MoE, Mamba2 SSD, Zamba2 hybrid, VLM/audio."""
+from .transformer import Model, get_model          # noqa: F401
+from .common import shard, rms_norm, linear        # noqa: F401
+from .attention import flash_attention             # noqa: F401

@@ -1,0 +1,192 @@
+"""GQA attention: flash-style chunked prefill, KV-cached decode.
+
+Features per the assigned configs: grouped KV heads, RoPE, optional QKV
+bias, attention logit soft-capping (gemma2), sliding-window masking for
+local layers (gemma2 alternation).
+
+The prefill path is a jax-native flash attention: lax.scan over KV chunks
+with online softmax — memory O(S · chunk) instead of O(S²), which is what
+lets the 32k-prefill cells fit (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH, MODEL, apply_rope, dense_init, linear, shard
+
+NEG_INF = -1e30
+
+# dtype for the post-softmax probabilities entering the PV matmul.
+# f32 is the conservative baseline; bf16 halves the dominant score-class
+# HBM traffic (hillclimb iteration, EXPERIMENTS.md §Perf).
+P_DTYPE = jnp.float32
+
+# int8 KV-cache scale (SIRA-style scaled-integer cache): k/v values are
+# stored as round(x / KV_SCALE) in int8; post-norm attention activations
+# sit in ~[-4, 4], so 1/16 covers the range with 6+ bits of resolution.
+KV_SCALE = 1.0 / 16.0
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, hd: int,
+                   qkv_bias: bool, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, n_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, n_kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, n_kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (n_heads * hd, d),
+                         scale=(n_heads * hd) ** -0.5, dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((n_kv * hd,), dtype)
+        p["bv"] = jnp.zeros((n_kv * hd,), dtype)
+    return p
+
+
+def _qkv(params, x, n_heads, n_kv, hd, positions, theta, quant=None):
+    B, S, _ = x.shape
+    q = linear(x, params["wq"], params.get("bq"), quant)
+    k = linear(x, params["wk"], params.get("bk"), quant)
+    v = linear(x, params["wv"], params.get("bv"), quant)
+    q = q.reshape(B, S, n_heads, hd)
+    k = k.reshape(B, S, n_kv, hd)
+    v = v.reshape(B, S, n_kv, hd)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = shard(q, BATCH, None, MODEL, None)
+    k = shard(k, BATCH, None, MODEL, None)
+    v = shard(v, BATCH, None, MODEL, None)
+    return q, k, v
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: int = 0,
+                    logit_cap: float = 0.0, chunk: int = 1024,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV chunks.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  window > 0 restricts each
+    query to the last ``window`` keys (sliding-window local attention)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    groups = H // KV
+    scale = hd ** -0.5
+    chunk = min(chunk, Sk)
+    while Sk % chunk != 0:      # largest divisor of Sk not above chunk
+        chunk -= 1
+    n_chunks = Sk // chunk
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, groups, hd)
+    kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, KV, hd)
+    vc = v.astype(jnp.float32).reshape(B, n_chunks, chunk, KV, hd)
+    kc = jnp.moveaxis(kc, 1, 0)       # (n, B, chunk, KV, hd)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, idx = inp
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qf, kb)      # (B,Sq,KV,g,chunk)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p.astype(P_DTYPE),
+                        vb.astype(P_DTYPE)).astype(jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, groups), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, groups, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_prefill(params, x, *, n_heads, n_kv, hd, theta,
+                      qkv_bias=False, logit_cap=0.0, window=0,
+                      chunk=1024, quant=None,
+                      return_kv=False):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _qkv(params, x, n_heads, n_kv, hd, positions, theta, quant)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          logit_cap=logit_cap, chunk=min(chunk, S))
+    y = linear(out.reshape(B, S, n_heads * hd), params["wo"], quant=quant)
+    y = shard(y, BATCH, None, None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(params, x, cache: Dict[str, jnp.ndarray],
+                     cache_index: jnp.ndarray, *, n_heads, n_kv, hd, theta,
+                     qkv_bias=False, logit_cap=0.0, window=0, quant=None,
+                     rolling: bool = False
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode against a (B, S_max, KV, hd) cache.
+
+    rolling=True treats the cache as a circular buffer of length S_max
+    (sliding-window local attention): writes go to ``index mod S_max``;
+    once the buffer has wrapped, every slot is a valid in-window key."""
+    B, S1, _ = x.shape  # S1 == 1
+    S_max = cache["k"].shape[1]
+    positions = jnp.broadcast_to(cache_index[None, None], (B, S1))
+    q, k, v = _qkv(params, x, n_heads, n_kv, hd, positions, theta, quant)
+    slot = jnp.mod(cache_index, S_max) if rolling else cache_index
+    int_cache = cache["k"].dtype == jnp.int8
+    if int_cache:  # scaled-integer KV cache (2x HBM saving on the
+        #            dominant decode term; see EXPERIMENTS.md §Perf)
+        k_st = jnp.clip(jnp.round(k.astype(jnp.float32) / KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+        v_st = jnp.clip(jnp.round(v.astype(jnp.float32) / KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+    else:
+        k_st, v_st = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_st,
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_st,
+                                           (0, slot, 0, 0))
+    kv_deq = KV_SCALE if int_cache else 1.0
+    groups = n_heads // n_kv
+    qf = (q.astype(jnp.float32) * hd ** -0.5 * kv_deq).reshape(
+        B, S1, n_kv, groups, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qf, k_cache.astype(jnp.float32))
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(S_max)
+    mask = k_pos <= cache_index
+    if rolling:
+        mask = mask | (cache_index >= S_max)
+    if window:
+        mask &= k_pos > cache_index - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", p,
+                     v_cache.astype(jnp.float32) * kv_deq)
+    out = out.reshape(B, S1, n_heads * hd).astype(x.dtype)
+    y = linear(out, params["wo"], quant=quant)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def init_kv_cache(batch: int, s_max: int, n_kv: int, hd: int, dtype
+                  ) -> Dict[str, jnp.ndarray]:
+    return {"k": jnp.zeros((batch, s_max, n_kv, hd), dtype),
+            "v": jnp.zeros((batch, s_max, n_kv, hd), dtype)}

@@ -1,0 +1,28 @@
+"""Gated MLP (SwiGLU / GeGLU) with QAT hooks."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH, MODEL, dense_init, linear, shard
+
+
+def init_mlp(key, d: int, ff: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d, ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (ff, d), scale=ff ** -0.5, dtype=dtype),
+    }
+
+
+def apply_mlp(params, x, act: str = "silu", quant=None) -> jnp.ndarray:
+    g = linear(x, params["w_gate"], quant=quant)
+    u = linear(x, params["w_up"], quant=quant)
+    g = shard(g, BATCH, None, MODEL)
+    u = shard(u, BATCH, None, MODEL)
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    y = linear(h, params["w_down"], quant=quant)
+    return shard(y, BATCH, None, None)

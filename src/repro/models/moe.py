@@ -1,0 +1,120 @@
+"""Top-k routed MoE with shared experts (GShard-style grouped dispatch).
+
+Tokens are grouped by batch row (G = B groups of S·k slots, the GShard
+"group" that bounds dispatch memory); within each group tokens are placed
+into per-expert capacity queues with a sort-free rank computation, then
+scattered into the (B, E, C, d) expert-parallel layout.  The expert axis
+shards on the mesh "model" axis, so GSPMD materializes the dispatch/return
+all_to_all pair — the EP collective that the roofline analysis tracks.
+
+Aux losses: Switch load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH, MODEL, dense_init, linear, shard
+from .mlp import apply_mlp, init_mlp
+
+
+def init_moe(key, d: int, n_experts: int, d_expert: int, n_shared: int,
+             dtype, n_experts_padded: int = 0) -> Dict[str, Any]:
+    """n_experts_padded (>= n_experts, multiple of the model-axis size)
+    sizes the expert arrays for expert parallelism; pad experts are never
+    routed to."""
+    ep = n_experts_padded or n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, n_experts), scale=d ** -0.5,
+                             dtype=jnp.float32),
+        "experts": {
+            "w_gate": dense_init(ks[1], (ep, d, d_expert),
+                                 dtype=dtype),
+            "w_up": dense_init(ks[2], (ep, d, d_expert), dtype=dtype),
+            "w_down": dense_init(ks[3], (ep, d_expert, d),
+                                 scale=d_expert ** -0.5, dtype=dtype),
+        },
+    }
+    if n_shared:
+        p["shared"] = init_mlp(ks[4], d, n_shared * d_expert, dtype)
+    return p
+
+
+def _rank_in_expert(flat_e: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Position of each slot within its expert's queue (stable order).
+
+    flat_e: (n,) int expert ids → (n,) int ranks, without materializing a
+    (n, E) one-hot (argsort-based; O(n log n))."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos_sorted = jnp.arange(n) - start[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+
+def apply_moe(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              act: str = "silu", quant=None
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) → (y, aux_losses)."""
+    B, S, d = x.shape
+    E = params["router"].shape[-1]
+
+    E_pad = params["experts"]["w_gate"].shape[0]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])                    # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(top_k, capacity_factor * S * top_k / E))
+    C = min(C, S * top_k)
+
+    flat_e = gate_idx.reshape(B, S * top_k)                  # (B, n)
+    pos = jax.vmap(lambda fe: _rank_in_expert(fe, E_pad))(flat_e)
+    in_cap = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    # dispatch: scatter x into (B, E, C, d)
+    x_rep = jnp.repeat(x, top_k, axis=1).reshape(B, S * top_k, d)
+    x_disp = jnp.where(in_cap[..., None], x_rep, 0)
+
+    def scatter_group(xg, eg, pg):
+        return jnp.zeros((E_pad, C, d), xg.dtype).at[eg, pg].add(xg)
+
+    xe = jax.vmap(scatter_group)(x_disp, flat_e, pos_c)      # (B, E, C, d)
+    xe = shard(xe, BATCH, MODEL, None, None)                 # EP layout
+
+    we = params["experts"]
+    g = jnp.einsum("becd,edf->becf", xe, we["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, we["w_up"])
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    ye = jnp.einsum("becf,efd->becd", h, we["w_down"])
+    ye = shard(ye, BATCH, MODEL, None, None)
+
+    # combine: gather back and weight by gates
+    def gather_group(yg, eg, pg):
+        return yg[eg, pg]                                    # (n, d)
+
+    y_tok = jax.vmap(gather_group)(ye, flat_e, pos_c)        # (B, n, d)
+    w_tok = (gate_vals.reshape(B, S * top_k) *
+             in_cap.astype(gate_vals.dtype))
+    y = (y_tok.astype(jnp.float32) * w_tok[..., None]).reshape(
+        B, S, top_k, d).sum(axis=2).astype(x.dtype)
+    y = shard(y, BATCH, None, None)
+
+    if "shared" in params:
+        y = y + apply_mlp(params["shared"], x, act=act, quant=quant)
+
+    # aux: Switch load-balance + router z-loss
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)   # (B,S,k,E)
+    density = onehot.sum(2).mean((0, 1))                      # (E,)
+    density_proxy = probs.mean((0, 1))
+    lb_loss = E * jnp.sum(density * density_proxy)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y, {"load_balance": lb_loss, "router_z": z_loss}

@@ -1,0 +1,191 @@
+"""Mamba2 block — SSD (state-space duality) chunked form (arXiv:2405.21060).
+
+Prefill uses the chunked dual algorithm: quadratic attention-like compute
+*within* chunks (MXU-friendly (C×C) blocks) and a linear recurrence over
+per-chunk states *between* chunks (lax.scan).  Decode is the O(1) stateful
+update.  The selective recurrence is input-dependent, so scaled-integer
+structure does not propagate through the scan (DESIGN.md §4) — SIRA still
+covers in/out projections and the conv.
+
+Layout: x (B, S, d) → in_proj → [z (d_in), x (d_in), B (G·N), C (G·N),
+dt (H)]; causal depthwise conv over (x, B, C); SSD over H heads of P =
+d_in/H channels with state N; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from .common import BATCH, MODEL, dense_init, linear, rms_norm, shard
+
+
+def init_mamba2(key, d: int, ssm: SSMConfig, dtype) -> Dict[str, Any]:
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    G, N = ssm.n_groups, ssm.d_state
+    d_proj = 2 * d_in + 2 * G * N + H
+    d_conv_ch = d_in + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, d_proj), dtype=dtype),
+        "conv_w": dense_init(ks[1], (ssm.d_conv, d_conv_ch),
+                             scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((d_conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 0.1, H))).astype(jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), scale=d_in ** -0.5,
+                               dtype=dtype),
+    }
+
+
+def _split_proj(proj, d_in, G, N, H):
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * G * N]
+    dt = proj[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along S.  xbc: (B, S, Ch); w: (K, Ch).
+    Returns (y, new_state) where state is the last K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)          # (B, S+K-1, Ch)
+    y = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(xh, dt, A, B_, C_, chunk: int):
+    """SSD dual-form scan.
+
+    xh (B,S,H,P), dt (B,S,H) softplus'd, A (H,) >0 decay rates,
+    B_/C_ (B,S,G,N) with G=1 broadcast over H.
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0
+
+    lam = (dt * A[None, None, :]).astype(jnp.float32)      # (B,S,H) decay
+    xw = (xh.astype(jnp.float32) * dt[..., None])          # dt-weighted input
+
+    def resh(t, tail):
+        return t.reshape((Bb, nc, chunk) + tail)
+
+    lam_c = resh(lam, (H,))
+    x_c = resh(xw, (H, P))
+    B_c = resh(B_.astype(jnp.float32), (1, N))[:, :, :, 0]  # (B,nc,c,N) G=1
+    C_c = resh(C_.astype(jnp.float32), (1, N))[:, :, :, 0]
+
+    # lam >= 0 is the *negative* log decay: step decay = exp(-lam).
+    csum = jnp.cumsum(lam_c, axis=2)                        # (B,nc,c,H)
+    seg = csum[:, :, :, None, :] - csum[:, :, None, :, :]   # (B,nc,c,c,H)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    L = jnp.where(causal[None, None, :, :, None],
+                  jnp.exp(-seg), 0.0)                       # decay matrix
+
+    # intra-chunk (quadratic, attention-like)
+    scores = jnp.einsum("bncj,bnmj->bncm", C_c, B_c)        # (B,nc,c,c)
+    y_intra = jnp.einsum("bncm,bncmh,bnmhp->bnchp",
+                         scores, L, x_c)
+
+    # per-chunk input→state: S_n = sum_m exp(-(csum_end - csum_m)) B_m x_m
+    decay_to_end = jnp.exp(-(csum[:, :, -1:, :] - csum))    # (B,nc,c,H)
+    state_in = jnp.einsum("bncj,bnch,bnchp->bnhpj",
+                          B_c, decay_to_end, x_c)           # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(-csum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(s, inp):
+        s_in, dec = inp                                     # (B,H,P,N),(B,H)
+        s_new = s * dec[:, :, None, None] + s_in
+        return s_new, s
+
+    s0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(state_in, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                   # (B,nc,H,P,N)
+
+    # inter-chunk: y_i += C_i · exp(-csum_i) S_prev (inclusive decay, since
+    # h_i = dec_i·h_{i-1} + in_i applies dec_1..dec_i to the carry)
+    decay_from_start = jnp.exp(-csum)
+    y_inter = jnp.einsum("bncj,bnch,bnhpj->bnchp",
+                         C_c, decay_from_start, s_prevs)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, s_final
+
+
+def apply_mamba2(params, x, ssm: SSMConfig, *, quant=None,
+                 state: Optional[Dict[str, jnp.ndarray]] = None,
+                 decode: bool = False):
+    """x (B, S, d).  Prefill: state=None, decode=False → (y, final_states).
+    Decode: S==1 with state dict → (y, new_state)."""
+    Bb, S, d = x.shape
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    G, N, P = ssm.n_groups, ssm.d_state, ssm.head_dim
+
+    proj = linear(x, params["in_proj"], quant=quant)
+    z, xbc, dt_raw = _split_proj(proj, d_in, G, N, H)
+    xbc = shard(xbc, BATCH, None, MODEL)
+
+    conv_state = state.get("conv") if state else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs = xbc[..., :d_in]
+    B_ = xbc[..., d_in:d_in + G * N].reshape(Bb, S, G, N)
+    C_ = xbc[..., d_in + G * N:].reshape(Bb, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"])                  # (B,S,H)
+    A = jnp.exp(params["A_log"])                             # (H,) > 0
+    xh = xs.reshape(Bb, S, H, P)
+    xh = shard(xh, BATCH, None, MODEL, None)
+
+    if decode:
+        assert S == 1 and state is not None
+        s_prev = state["ssd"]                                # (B,H,P,N)
+        lam = (dt[:, 0, :] * A[None, :])                     # (B,H)
+        dec = jnp.exp(-lam)
+        xw = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]
+        s_new = s_prev * dec[:, :, None, None] + \
+            jnp.einsum("bj,bhp->bhpj", B_[:, 0, 0].astype(jnp.float32), xw)
+        y = jnp.einsum("bj,bhpj->bhp", C_[:, 0, 0].astype(jnp.float32),
+                       s_new)
+        y = y[:, None]                                       # (B,1,H,P)
+        s_final = s_new
+    else:
+        y, s_final = ssd_chunked(xh, dt, A, B_, C_, min(ssm.chunk, S))
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bb, S, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    out = linear(y, params["out_proj"], quant=quant)
+    out = shard(out, BATCH, None, None)
+    new_state = {"conv": new_conv, "ssd": s_final}
+    return out, new_state
+
+
+def init_mamba_state(batch: int, d: int, ssm: SSMConfig, dtype
+                     ) -> Dict[str, jnp.ndarray]:
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    ch = d_in + 2 * ssm.n_groups * ssm.d_state
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, ch), dtype),
+        "ssd": jnp.zeros((batch, H, ssm.head_dim, ssm.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,390 @@
+"""Top-level model assembly for all assigned architecture families.
+
+One functional ``Model`` facade per ArchConfig:
+
+  * ``init(key)``        → params pytree (repeated layers stacked for scan)
+  * ``forward(...)``     → logits (training teacher-forcing / prefill)
+  * ``init_cache(...)``  → decode cache pytree (KV / SSM states)
+  * ``decode_step(...)`` → (logits, new_cache) for one token
+  * ``loss(...)``        → mean token cross-entropy (+ MoE aux)
+
+Families: dense (incl. gemma2 local/global alternation + softcaps), moe,
+ssm (Mamba2), hybrid (Zamba2: Mamba2 backbone + one shared attention
+block applied every ``attn_every`` layers), vlm/audio (dense backbone +
+frontend embedding stub prepended per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .attention import (attention_decode, attention_prefill, init_attention,
+                        init_kv_cache)
+from .common import (BATCH, MODEL, dense_init, embed_init, linear, rms_norm,
+                     shard, softcap)
+from .mlp import apply_mlp, init_mlp
+from .moe import apply_moe, init_moe
+from .ssm import apply_mamba2, init_mamba2, init_mamba_state
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# --------------------------------------------------------------------------
+# layer init
+# --------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    p = {
+        "ln1": jnp.zeros((d,), cfg.dtype),
+        "attn": init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.qkv_bias, cfg.dtype),
+        "ln2": jnp.zeros((d,), cfg.dtype),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.dtype),
+    }
+    if cfg.post_norms:
+        p["post_ln1"] = jnp.zeros((d,), cfg.dtype)
+        p["post_ln2"] = jnp.zeros((d,), cfg.dtype)
+    return p
+
+
+def _init_moe_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), cfg.dtype),
+        "attn": init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.qkv_bias, cfg.dtype),
+        "ln2": jnp.zeros((d,), cfg.dtype),
+        "moe": init_moe(ks[1], d, cfg.moe.n_experts, cfg.moe.d_expert,
+                        cfg.moe.n_shared, cfg.dtype,
+                        n_experts_padded=cfg.n_experts_padded),
+    }
+
+
+def _init_mamba_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mamba": init_mamba2(key, cfg.d_model, cfg.ssm, cfg.dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# layer apply (prefill & decode variants)
+# --------------------------------------------------------------------------
+
+def _dense_layer_fwd(p, x, cfg: ArchConfig, *, window: int, quant=None):
+    h = attention_prefill(
+        p["attn"], rms_norm(x, p["ln1"]), n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta,
+        logit_cap=cfg.attn_softcap, window=window, quant=quant)
+    if cfg.post_norms:
+        h = rms_norm(h, p["post_ln1"])
+    x = x + h
+    h = apply_mlp(p["mlp"], rms_norm(x, p["ln2"]), act=cfg.mlp_act,
+                  quant=quant)
+    if cfg.post_norms:
+        h = rms_norm(h, p["post_ln2"])
+    return x + h
+
+
+def _dense_layer_dec(p, x, cache, idx, cfg: ArchConfig, *, window: int,
+                     quant=None, rolling: bool = False):
+    h, cache = attention_decode(
+        p["attn"], rms_norm(x, p["ln1"]), cache, idx, n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta,
+        logit_cap=cfg.attn_softcap, window=window, quant=quant,
+        rolling=rolling)
+    if cfg.post_norms:
+        h = rms_norm(h, p["post_ln1"])
+    x = x + h
+    h = apply_mlp(p["mlp"], rms_norm(x, p["ln2"]), act=cfg.mlp_act,
+                  quant=quant)
+    if cfg.post_norms:
+        h = rms_norm(h, p["post_ln2"])
+    return x + h, cache
+
+
+def _moe_layer_fwd(p, x, cfg: ArchConfig, *, quant=None):
+    h = attention_prefill(
+        p["attn"], rms_norm(x, p["ln1"]), n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta, quant=quant)
+    x = x + h
+    h, aux = apply_moe(p["moe"], rms_norm(x, p["ln2"]),
+                       top_k=cfg.moe.top_k,
+                       capacity_factor=cfg.moe.capacity_factor,
+                       act=cfg.mlp_act, quant=quant)
+    return x + h, aux
+
+
+def _moe_layer_dec(p, x, cache, idx, cfg: ArchConfig, *, quant=None):
+    h, cache = attention_decode(
+        p["attn"], rms_norm(x, p["ln1"]), cache, idx, n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta, quant=quant)
+    x = x + h
+    h, _ = apply_moe(p["moe"], rms_norm(x, p["ln2"]), top_k=cfg.moe.top_k,
+                     capacity_factor=cfg.moe.capacity_factor,
+                     act=cfg.mlp_act, quant=quant)
+    return x + h, cache
+
+
+# --------------------------------------------------------------------------
+# Model facade
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_layers, k_head, k_shared = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model,
+                                cfg.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                k_head, (cfg.d_model, cfg.vocab_padded), dtype=cfg.dtype)
+
+        if cfg.family in ("dense", "vlm", "audio"):
+            group = 2 if cfg.sliding_window else 1
+            n_groups = cfg.n_layers // group
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            layers = [_init_dense_layer(k, cfg) for k in keys]
+            if group == 2:
+                pairs = [{"local": layers[2 * i], "global": layers[2 * i + 1]}
+                         for i in range(n_groups)]
+                params["layers"] = _stack(pairs)
+            else:
+                params["layers"] = _stack(layers)
+        elif cfg.family == "moe":
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            params["layers"] = _stack([_init_moe_layer(k, cfg)
+                                       for k in keys])
+        elif cfg.family == "ssm":
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            params["layers"] = _stack([_init_mamba_layer(k, cfg)
+                                       for k in keys])
+        elif cfg.family == "hybrid":
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            n_groups = cfg.n_layers // cfg.attn_every
+            blocks = [_init_mamba_layer(k, cfg) for k in keys]
+            stacked = _stack(blocks)
+            params["layers"] = jax.tree.map(
+                lambda a: a.reshape((n_groups, cfg.attn_every)
+                                    + a.shape[1:]), stacked)
+            params["shared_attn"] = _init_dense_layer(k_shared, cfg)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # ------------------------------------------------------ embeddings
+    def _embed(self, params, tokens, frontend_embed):
+        cfg = self.cfg
+        x = params["embed"][tokens] * jnp.asarray(
+            cfg.d_model ** 0.5, cfg.dtype)
+        if frontend_embed is not None:
+            x = jnp.concatenate(
+                [frontend_embed.astype(x.dtype), x], axis=1)
+        return shard(x, BATCH, None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        if isinstance(head, dict):       # int8-packed lm_head
+            head = head["q"].astype(x.dtype) * head["s"].astype(x.dtype)
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        logits = softcap(logits, cfg.final_softcap)
+        if cfg.vocab_padded != cfg.vocab:
+            pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+            logits = jnp.where(pad_mask, logits,
+                               jnp.asarray(-1e30, logits.dtype))
+        return shard(logits, BATCH, None, MODEL)
+
+    # ---------------------------------------------------------- forward
+    def forward(self, params, tokens, frontend_embed=None, *, quant=None,
+                remat: bool = False, return_aux: bool = False):
+        """Teacher-forcing / prefill forward → logits (B, S_total, V)
+        (with MoE aux losses when return_aux)."""
+        cfg = self.cfg
+        aux = None
+        x = self._embed(params, tokens, frontend_embed)
+
+        if cfg.family in ("dense", "vlm", "audio"):
+            def body(x, p):
+                if cfg.sliding_window:
+                    x = _dense_layer_fwd(p["local"], x, cfg,
+                                         window=cfg.sliding_window,
+                                         quant=quant)
+                    x = _dense_layer_fwd(p["global"], x, cfg, window=0,
+                                         quant=quant)
+                else:
+                    x = _dense_layer_fwd(p, x, cfg, window=0, quant=quant)
+                return x
+            f = jax.checkpoint(body) if remat else body
+            x, _ = jax.lax.scan(lambda c, p: (f(c, p), None), x,
+                                params["layers"])
+        elif cfg.family == "moe":
+            def body_moe(x, p):
+                return _moe_layer_fwd(p, x, cfg, quant=quant)
+            f = jax.checkpoint(body_moe) if remat else body_moe
+            x, auxs = jax.lax.scan(lambda c, p: f(c, p), x,
+                                   params["layers"])
+            aux = jax.tree.map(jnp.mean, auxs)
+        elif cfg.family == "ssm":
+            def body_ssm(x, p):
+                h, _ = apply_mamba2(p["mamba"], rms_norm(x, p["ln"]),
+                                    cfg.ssm, quant=quant)
+                return x + h
+            f = jax.checkpoint(body_ssm) if remat else body_ssm
+            x, _ = jax.lax.scan(lambda c, p: (f(c, p), None), x,
+                                params["layers"])
+        elif cfg.family == "hybrid":
+            def inner(x, p):
+                h, _ = apply_mamba2(p["mamba"], rms_norm(x, p["ln"]),
+                                    cfg.ssm, quant=quant)
+                return x + h
+            fi = jax.checkpoint(inner) if remat else inner
+
+            def group_body(x, pg):
+                x, _ = jax.lax.scan(lambda c, p: (fi(c, p), None), x, pg)
+                return _dense_layer_fwd(params["shared_attn"], x, cfg,
+                                        window=0, quant=quant)
+            fg = jax.checkpoint(group_body) if remat else group_body
+            x, _ = jax.lax.scan(lambda c, pg: (fg(c, pg), None), x,
+                                params["layers"])
+        logits = self._logits(params, x)
+        if return_aux:
+            return logits, aux
+        return logits
+
+    # ------------------------------------------------------------ cache
+    def init_cache(self, batch: int, s_max: int,
+                   kv_dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        kv_dtype = kv_dtype or cfg.dtype
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            group = 2 if cfg.sliding_window else 1
+            n = cfg.n_layers // group
+            one = init_kv_cache(batch, s_max, cfg.n_kv_heads, cfg.hd,
+                                kv_dtype)
+            if group == 2:
+                # local layers only need a sliding_window-deep rolling cache
+                local = init_kv_cache(batch, min(cfg.sliding_window, s_max),
+                                      cfg.n_kv_heads, cfg.hd, kv_dtype)
+                cache = {"local": local, "global": one}
+            else:
+                cache = one
+            return jax.tree.map(
+                lambda a: jnp.zeros((n,) + a.shape, a.dtype), cache)
+        if cfg.family == "ssm":
+            one = init_mamba_state(batch, cfg.d_model, cfg.ssm, cfg.dtype)
+            return jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+        if cfg.family == "hybrid":
+            n_groups = cfg.n_layers // cfg.attn_every
+            m = init_mamba_state(batch, cfg.d_model, cfg.ssm, cfg.dtype)
+            mamba = jax.tree.map(
+                lambda a: jnp.zeros((n_groups, cfg.attn_every) + a.shape,
+                                    a.dtype), m)
+            kv = init_kv_cache(batch, s_max, cfg.n_kv_heads, cfg.hd,
+                               kv_dtype)
+            kv = jax.tree.map(
+                lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype), kv)
+            return {"mamba": mamba, "attn": kv}
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------ decode step
+    def decode_step(self, params, tokens, cache, cache_index, *,
+                    quant=None) -> Tuple[jnp.ndarray, Any]:
+        """tokens (B, 1) → (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, None)
+
+        if cfg.family in ("dense", "vlm", "audio"):
+            def body(x, pc):
+                p, c = pc
+                if cfg.sliding_window:
+                    # local cache is a rolling window buffer: the buffer
+                    # length == window enforces locality; rope positions
+                    # were applied at write time so slots stay valid.
+                    x, cl = _dense_layer_dec(
+                        p["local"], x, c["local"], cache_index, cfg,
+                        window=0, quant=quant, rolling=True)
+                    x, cg = _dense_layer_dec(
+                        p["global"], x, c["global"], cache_index, cfg,
+                        window=0, quant=quant)
+                    return x, {"local": cl, "global": cg}
+                return _dense_layer_dec(p, x, c, cache_index, cfg,
+                                        window=0, quant=quant)
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        elif cfg.family == "moe":
+            def body_m(x, pc):
+                p, c = pc
+                return _moe_layer_dec(p, x, c, cache_index, cfg,
+                                      quant=quant)
+            x, new_cache = jax.lax.scan(body_m, x,
+                                        (params["layers"], cache))
+        elif cfg.family == "ssm":
+            def body_s(x, pc):
+                p, c = pc
+                h, cn = apply_mamba2(p["mamba"], rms_norm(x, p["ln"]),
+                                     cfg.ssm, quant=quant, state=c,
+                                     decode=True)
+                return x + h, cn
+            x, new_cache = jax.lax.scan(body_s, x,
+                                        (params["layers"], cache))
+        elif cfg.family == "hybrid":
+            def body_h(x, pc):
+                pg, cm, ckv = pc
+
+                def inner(x, pci):
+                    p, c = pci
+                    h, cn = apply_mamba2(p["mamba"], rms_norm(x, p["ln"]),
+                                         cfg.ssm, quant=quant, state=c,
+                                         decode=True)
+                    return x + h, cn
+                x, cm_new = jax.lax.scan(inner, x, (pg, cm))
+                x, ckv_new = _dense_layer_dec(
+                    params["shared_attn"], x, ckv, cache_index, cfg,
+                    window=0, quant=quant)
+                return x, (cm_new, ckv_new)
+            x, (cm, ckv) = jax.lax.scan(
+                body_h, x, (params["layers"], cache["mamba"],
+                            cache["attn"]))
+            new_cache = {"mamba": cm, "attn": ckv}
+        return self._logits(params, x), new_cache
+
+    # -------------------------------------------------------------- loss
+    def loss(self, params, tokens, labels, frontend_embed=None, *,
+             quant=None, remat: bool = False) -> jnp.ndarray:
+        cfg = self.cfg
+        logits = self.forward(params, tokens, frontend_embed, quant=quant,
+                              remat=remat)
+        if frontend_embed is not None:
+            logits = logits[:, frontend_embed.shape[1]:]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        aux = getattr(self, "_last_aux", None)
+        if aux is not None:
+            nll = nll + 0.01 * aux["load_balance"] + 1e-3 * aux["router_z"]
+        return nll
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

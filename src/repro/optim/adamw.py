@@ -1,0 +1,82 @@
+"""AdamW with cosine schedule, global-norm clipping and bf16-param /
+f32-master-weight mixed precision (pure-JAX pytrees; no optax).
+
+The optimizer state holds f32 master weights plus first/second moments;
+model params may live in bf16 (TPU matmul dtype) and are re-materialized
+from the masters each step — the standard large-model recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Any          # f32 master weights
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - self.warmup_steps)
+                     / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def init(self, params: Any) -> AdamWState:
+        # copy=True: astype on an already-f32 param would alias the same
+        # buffer, breaking donation (donate(params) + donate(master))
+        f32 = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        zeros = jax.tree.map(jnp.zeros_like, f32)
+        return AdamWState(step=jnp.zeros((), jnp.int32), master=f32,
+                          m=zeros, v=jax.tree.map(jnp.zeros_like, f32))
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> Tuple[Any, AdamWState]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                 for g in jax.tree.leaves(g32)))
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                         state.v, g32)
+
+        def upd(p, m_, v_):
+            mh = m_ / b1c
+            vh = v_ / b2c
+            return p - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                             + self.weight_decay * p)
+
+        master = jax.tree.map(upd, state.master, m, v)
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, AdamWState(step=step, master=master, m=m, v=v)

@@ -1,0 +1,6 @@
+"""Quantization substrate: uniform affine quantizers, QAT/PTQ, integer ops."""
+from .quantizer import (QuantSpec, compute_scale, quantize_int, dequantize,  # noqa: F401
+                        fake_quant, fake_quant_dynamic, to_int_dtype,
+                        int_matmul)
+from .calibrate import (MinMaxObserver, PercentileObserver,  # noqa: F401
+                        calibrate_model)

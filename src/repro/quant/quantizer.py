@@ -1,0 +1,159 @@
+"""Uniform affine quantizers in JAX (paper §2.1/§2.3; Brevitas-analog).
+
+Supports the full QONNX Quant parameter space: arbitrary bitwidth,
+signed/unsigned, narrow range, per-tensor / per-channel / per-group scale
+granularity, float or power-of-two (PoT) scales, zero-points, and
+straight-through-estimator (STE) fake quantization for QAT.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 8
+    signed: bool = True
+    narrow: bool = False
+    granularity: str = "per_tensor"   # per_tensor | per_channel | per_group
+    channel_axis: int = -1
+    group_size: int = 32
+    pot: bool = False                 # power-of-two scale restriction
+    symmetric: bool = True            # zero_point == 0
+
+    @property
+    def qmin(self) -> int:
+        if self.signed:
+            return -(2 ** (self.bits - 1)) + (1 if self.narrow else 0)
+        return 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2 ** self.bits - 1
+
+
+def _reduce_axes(x: jnp.ndarray, spec: QuantSpec) -> Tuple[int, ...]:
+    if spec.granularity == "per_tensor":
+        return tuple(range(x.ndim))
+    ax = spec.channel_axis % x.ndim
+    return tuple(i for i in range(x.ndim) if i != ax)
+
+
+def compute_scale(x: jnp.ndarray, spec: QuantSpec,
+                  eps: float = 1e-8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Min/max calibration → (scale, zero_point), broadcastable to x."""
+    if spec.granularity == "per_group":
+        ax = spec.channel_axis % x.ndim
+        g = spec.group_size
+        shp = list(x.shape)
+        assert shp[ax] % g == 0, "group_size must divide the channel dim"
+        xg = jnp.moveaxis(x, ax, -1).reshape(-1, shp[ax] // g, g)
+        amax = jnp.abs(xg).max(axis=(0, 2), keepdims=True)       # (1, G, 1)
+        s = jnp.maximum(amax / spec.qmax, eps)
+        s = jnp.broadcast_to(s, (1, shp[ax] // g, g)).reshape(shp[ax])
+        shape = [1] * x.ndim
+        shape[ax] = shp[ax]
+        s = s.reshape(shape)
+        z = jnp.zeros_like(s)
+    elif spec.symmetric:
+        axes = _reduce_axes(x, spec)
+        amax = jnp.abs(x).max(axis=axes, keepdims=True)
+        s = jnp.maximum(amax / spec.qmax, eps)
+        z = jnp.zeros_like(s)
+    else:
+        axes = _reduce_axes(x, spec)
+        x_lo = x.min(axis=axes, keepdims=True)
+        x_hi = x.max(axis=axes, keepdims=True)
+        s = jnp.maximum((x_hi - x_lo) / (spec.qmax - spec.qmin), eps)
+        z = jnp.round(spec.qmin - x_lo / s)
+    if spec.pot:
+        s = jnp.exp2(jnp.ceil(jnp.log2(s)))
+    return s, z
+
+
+def quantize_int(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
+                 spec: QuantSpec) -> jnp.ndarray:
+    """g ∘ f⁻¹: real → clipped integer (float dtype carrier)."""
+    q = jnp.round(x / scale + zero_point)
+    return jnp.clip(q, spec.qmin, spec.qmax)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray
+               ) -> jnp.ndarray:
+    return scale * (q - zero_point)
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
+               spec: QuantSpec) -> jnp.ndarray:
+    """Q(x) = f(g(f⁻¹(x))) with a straight-through gradient (QAT).
+
+    The STE passes gradients through the round+clip as identity within the
+    representable range and zero outside (clipped STE)."""
+    q = quantize_int(jax.lax.stop_gradient(x), scale, zero_point, spec)
+    y = dequantize(q, scale, zero_point)
+    # clipped STE: identity gradient inside the clip range
+    lo = dequantize(jnp.asarray(float(spec.qmin)), scale, zero_point)
+    hi = dequantize(jnp.asarray(float(spec.qmax)), scale, zero_point)
+    x_clipped = jnp.clip(x, lo, hi)
+    return x_clipped + jax.lax.stop_gradient(y - x_clipped)
+
+
+def fake_quant_dynamic(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Fake-quant with scales computed on the fly from the current batch
+    (used for QAT activation quantizers before calibration freezes them)."""
+    s, z = compute_scale(jax.lax.stop_gradient(x), spec)
+    return fake_quant(x, s, z, spec)
+
+
+# --------------------------------------------------------------------------
+# integer-arithmetic helpers (serving path)
+# --------------------------------------------------------------------------
+
+def to_int_dtype(q: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    if spec.bits <= 8:
+        return q.astype(jnp.int8)
+    if spec.bits <= 16:
+        return q.astype(jnp.int16)
+    return q.astype(jnp.int32)
+
+
+def int_matmul(qx: jnp.ndarray, qw: jnp.ndarray,
+               acc_dtype=jnp.int32) -> jnp.ndarray:
+    """Integer matmul on the MXU int path: int8 × int8 → int32."""
+    return jax.lax.dot_general(
+        qx, qw, (((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype)
+
+
+def pack_weights_int8(params, min_size: int = 1 << 12):
+    """Pack every 2D+ float weight as {q: int8, s: f32 per-out-channel} —
+    the deployed form of the paper's streamlined integer graph (weight-only
+    W8): HBM weight traffic halves vs bf16 and the integer MatMul kernel
+    consumes q directly.  Small tensors (norms, biases) stay float."""
+    import numpy as np
+
+    PACKABLE = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                "in_proj", "out_proj", "lm_head")
+
+    def pack(path, w):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if not keys or keys[-1] not in PACKABLE:
+            return w
+        if w.ndim < 2 or w.size < min_size or \
+                w.dtype not in (jnp.float32, jnp.bfloat16):
+            return w
+        # per-output-channel scale over the fan-in axis only, so stacked
+        # (L, d, m) layer weights keep their leading scan axis
+        wf = w.astype(jnp.float32)
+        sc = jnp.maximum(jnp.abs(wf).max(axis=-2, keepdims=True) / 127.0,
+                         1e-8)
+        q = jnp.clip(jnp.round(wf / sc), -128, 127).astype(jnp.int8)
+        return {"q": q, "s": sc.astype(jnp.float32)}
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, w: pack(kp, w), params)

@@ -1,0 +1,2 @@
+from .analysis import (parse_collectives, roofline_from,  # noqa: F401
+                       model_flops_for, Roofline, CollectiveStats)

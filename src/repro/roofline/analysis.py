@@ -1,0 +1,195 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Per (arch × shape × mesh) cell we derive three time terms for TPU v5e:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s          (197e12 bf16)
+    memory     = HLO_bytes_per_chip / HBM_bw               (819e9 B/s)
+    collective = collective_bytes_per_chip / link_bw       (~50e9 B/s/link)
+
+``cost_analysis()`` yields per-chip FLOPs and bytes post-SPMD.  Collective
+bytes are parsed from the optimized HLO: for every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute we sum the
+*operand* shard sizes (looked up from the defining instructions), as the
+assignment specifies.  A ring-model estimate (bytes actually on the wire)
+is reported alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (≈ per-direction ICI)
+DCN_BW = 6.25e9            # bytes/s per chip across pods (50 Gbit/s)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one shape token like bf16[128,1024] (tuples: sum parts)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    operand_bytes: Dict[str, int]     # per-chip operand shard bytes
+    wire_bytes: Dict[str, int]        # ring-model on-the-wire bytes
+    cross_pod_bytes: int = 0          # operand bytes of pod-axis collectives
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str,
+                      n_devices: int = 0,
+                      pod_group_size: Optional[int] = None
+                      ) -> CollectiveStats:
+    """Scan optimized HLO for collectives; sum operand shard sizes."""
+    # map instruction name -> result type string
+    result_type: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, rhs = m.groups()
+            tm = _SHAPE_RE.search(rhs)
+            if tm:
+                # capture the full type prefix (up to the op name)
+                result_type[name] = rhs.split(")")[0]
+
+    counts: Dict[str, int] = {}
+    op_bytes: Dict[str, int] = {}
+    wire: Dict[str, int] = {}
+    cross_pod = 0
+    for line in hlo_text.splitlines():
+        mm = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                       r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                       r"collective-permute)(-start)?\(", line)
+        if not mm:
+            continue
+        op = mm.group(1)
+        if mm.group(2):  # async start; skip -done twin counting
+            pass
+        if f"{op}-done" in line:
+            continue
+        # operands: inside the parens, reference names %foo
+        paren = line[line.index("(", mm.start()):]
+        operands = re.findall(r"%([\w\.\-]+)", paren)
+        ob = 0
+        for o in operands:
+            t = result_type.get(o)
+            if t:
+                ob += _shape_bytes(t)
+        if ob == 0:
+            # fall back to result size
+            m2 = _DEF_RE.match(line)
+            if m2:
+                ob = _shape_bytes(m2.group(2).split(op)[0])
+        # group size from replica_groups=[g,k]<=[N] or explicit lists
+        gsz = 0
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)", line)
+        if gm:
+            gsz = int(gm.group(2))
+        else:
+            gm2 = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+            if gm2:
+                gsz = len(gm2.group(1).split(","))
+        counts[op] = counts.get(op, 0) + 1
+        op_bytes[op] = op_bytes.get(op, 0) + ob
+        # ring model (per chip): AR 2(g-1)/g · b ; AG/RS (g-1)/g · b ;
+        # A2A (g-1)/g · b ; permute b
+        g = max(gsz, 2)
+        if op == "all-reduce":
+            w = int(2 * (g - 1) / g * ob)
+        elif op == "collective-permute":
+            w = ob
+        else:
+            w = int((g - 1) / g * ob)
+        wire[op] = wire.get(op, 0) + w
+        if pod_group_size and gsz and gsz == pod_group_size:
+            cross_pod += ob
+    return CollectiveStats(counts=counts, operand_bytes=op_bytes,
+                           wire_bytes=wire, cross_pod_bytes=cross_pod)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float              # 6·N·D (global, fwd+bwd) or 2·N·D
+    useful_flops_frac: float        # MODEL / (HLO · chips)
+    mfu_bound: float                # max roofline fraction achievable
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from(cost: Dict[str, float], colls: CollectiveStats,
+                  n_chips: int, model_flops: float,
+                  link_bw: float = ICI_BW) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(colls.total_operand_bytes)
+    wb = float(colls.total_wire_bytes)
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = cb / link_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    hlo_total = flops * n_chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    t_star = max(t_c, t_m, t_x)
+    mfu_bound = (model_flops / n_chips / PEAK_FLOPS) / t_star \
+        if t_star > 0 else 0.0
+    return Roofline(flops_per_chip=flops, bytes_per_chip=byts,
+                    collective_bytes_per_chip=cb, wire_bytes_per_chip=wb,
+                    compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                    bottleneck=bottleneck, model_flops=model_flops,
+                    useful_flops_frac=useful, mfu_bound=mfu_bound)
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1      # decode: one token per sequence
+    return 2.0 * n_active * tokens

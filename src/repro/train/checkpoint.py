@@ -1,0 +1,98 @@
+"""Fault-tolerant checkpointing: atomic-rename npz of the full train state
+(params, optimizer moments, data cursor, RNG) + resume.
+
+Guarantees:
+  * atomicity — write to a temp file, fsync, rename; a crash mid-write
+    never corrupts the latest checkpoint;
+  * bitwise-deterministic resume (tested in tests/test_train.py);
+  * retention — keep the last ``keep`` checkpoints, delete older;
+  * multi-host discipline — only host 0 writes (callers gate on
+    ``jax.process_index() == 0``); all hosts restore identically.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_state(state: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves, treedef = jax.tree.flatten(state)
+    flat["__treedef__"] = np.frombuffer(
+        str(treedef).encode(), dtype=np.uint8)
+    for i, leaf in enumerate(leaves):
+        if leaf is None:
+            continue
+        flat[f"leaf_{i}"] = np.asarray(leaf)
+    flat["__nleaves__"] = np.asarray(len(leaves))
+    flat["__none_mask__"] = np.asarray(
+        [leaf is None for leaf in leaves])
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    extra: Optional[Dict[str, Any]] = None,
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten_state(state)
+    if extra:
+        flat["__extra__"] = np.frombuffer(
+            json.dumps(extra).encode(), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, path)            # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _gc(directory, keep)
+    return path
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(p for p in os.listdir(directory)
+                   if p.startswith("ckpt_") and p.endswith(".npz"))
+    return os.path.join(directory, cands[-1]) if cands else None
+
+
+def restore_checkpoint(path: str, state_like: Any
+                       ) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``state_like`` (treedef template)."""
+    data = np.load(path, allow_pickle=False)
+    leaves, treedef = jax.tree.flatten(state_like)
+    none_mask = data["__none_mask__"]
+    out = []
+    for i, leaf in enumerate(leaves):
+        if none_mask[i]:
+            out.append(None)
+        else:
+            arr = data[f"leaf_{i}"]
+            if leaf is not None and hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            out.append(arr)
+    extra = {}
+    if "__extra__" in data:
+        extra = json.loads(bytes(data["__extra__"]).decode())
+    return jax.tree.unflatten(treedef, out), extra
+
+
+def step_of(path: str) -> int:
+    return int(os.path.basename(path)[5:13])
+
+
+def _gc(directory: str, keep: int) -> None:
+    cands = sorted(p for p in os.listdir(directory)
+                   if p.startswith("ckpt_") and p.endswith(".npz"))
+    for p in cands[:-keep]:
+        os.unlink(os.path.join(directory, p))

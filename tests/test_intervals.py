@@ -1,0 +1,95 @@
+"""Unit + property tests for interval arithmetic primitives."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.intervals import (ScaledIntRange, add_intervals,
+                                  dot_interval, dyn_dot_interval,
+                                  monotonic_fn_interval, mul_intervals)
+
+
+def test_point_range_integer_detection():
+    r = ScaledIntRange.point(np.array([1.0, -3.0]))
+    assert r.is_point and r.is_scaled_int
+    r2 = ScaledIntRange.point(np.array([1.5]))
+    assert r2.is_point and not r2.is_scaled_int
+
+
+def test_required_bits():
+    r = ScaledIntRange.from_scaled_int(-96, 96, 1.0)
+    assert r.required_signed_bits() == 8          # paper Fig 12 example
+    r2 = ScaledIntRange.from_scaled_int(0, 255, 1.0)
+    assert r2.required_unsigned_bits() == 8
+    r3 = ScaledIntRange.from_scaled_int(-128, 127, 1.0)
+    assert r3.required_signed_bits() == 8
+
+
+def test_from_scaled_int_consistency():
+    r = ScaledIntRange.from_scaled_int(-7, 5, 0.7, 1.0)
+    np.testing.assert_allclose(r.lo, -7 * 0.7 + 1.0)
+    np.testing.assert_allclose(r.hi, 5 * 0.7 + 1.0)
+
+
+@given(st.lists(st.floats(-100, 100), min_size=2, max_size=2),
+       st.lists(st.floats(-100, 100), min_size=2, max_size=2),
+       st.floats(-100, 100), st.floats(-100, 100))
+@settings(max_examples=200, deadline=None)
+def test_mul_interval_soundness(a, b, xa, xb):
+    a_lo, a_hi = min(a), max(a)
+    b_lo, b_hi = min(b), max(b)
+    x = a_lo + abs(xa) % (a_hi - a_lo + 1e-9)
+    y = b_lo + abs(xb) % (b_hi - b_lo + 1e-9)
+    x, y = np.clip(x, a_lo, a_hi), np.clip(y, b_lo, b_hi)
+    lo, hi = mul_intervals(np.asarray(a_lo), np.asarray(a_hi),
+                           np.asarray(b_lo), np.asarray(b_hi))
+    assert lo - 1e-6 <= x * y <= hi + 1e-6
+
+
+@given(st.integers(1, 8), st.integers(1, 5), st.data())
+@settings(max_examples=50, deadline=None)
+def test_dot_interval_soundness(k, m, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    w = rng.normal(size=(k, m))
+    x_lo = rng.normal(size=(k,)) - 1.0
+    x_hi = x_lo + np.abs(rng.normal(size=(k,)))
+    lo, hi = dot_interval(w, x_lo, x_hi)
+    for _ in range(20):
+        x = rng.uniform(x_lo, x_hi)
+        y = x @ w
+        assert np.all(y >= lo - 1e-9) and np.all(y <= hi + 1e-9)
+
+
+def test_dot_interval_exact_at_extremes():
+    """The bound must be achieved by the minimizing/maximizing vectors."""
+    w = np.array([[1.0, -2.0], [3.0, 0.5]])
+    x_lo, x_hi = np.array([-1.0, 0.0]), np.array([2.0, 1.0])
+    lo, hi = dot_interval(w, x_lo, x_hi)
+    # column 0: w=(1,3): max at (2,1) = 5; min at (-1,0) = -1
+    assert np.isclose(hi[0], 5.0) and np.isclose(lo[0], -1.0)
+    # column 1: w=(-2,0.5): max at (-1,1) = 2.5; min at (2,0) = -4
+    assert np.isclose(hi[1], 2.5) and np.isclose(lo[1], -4.0)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4), st.data())
+@settings(max_examples=30, deadline=None)
+def test_dyn_dot_soundness(m, k, n, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    a_lo = rng.normal(size=(m, k)) - 0.5
+    a_hi = a_lo + np.abs(rng.normal(size=(m, k)))
+    b_lo = rng.normal(size=(k, n)) - 0.5
+    b_hi = b_lo + np.abs(rng.normal(size=(k, n)))
+    lo, hi = dyn_dot_interval(a_lo, a_hi, b_lo, b_hi)
+    for _ in range(10):
+        a = rng.uniform(a_lo, a_hi)
+        b = rng.uniform(b_lo, b_hi)
+        y = a @ b
+        assert np.all(y >= lo - 1e-9) and np.all(y <= hi + 1e-9)
+
+
+def test_monotonic_fn_interval():
+    lo, hi = monotonic_fn_interval(np.tanh, np.array(-2.0), np.array(3.0))
+    assert np.isclose(lo, np.tanh(-2.0)) and np.isclose(hi, np.tanh(3.0))
+    # decreasing function
+    lo, hi = monotonic_fn_interval(lambda x: -x, np.array(-2.0),
+                                   np.array(3.0))
+    assert np.isclose(lo, -3.0) and np.isclose(hi, 2.0)

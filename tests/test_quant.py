@@ -1,0 +1,109 @@
+"""Quantizer substrate tests: round trips, granularities, PoT, STE, PTQ."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (MinMaxObserver, PercentileObserver, QuantSpec,
+                         compute_scale, dequantize, fake_quant,
+                         fake_quant_dynamic, quantize_int)
+
+
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_channel",
+                                         "per_group"])
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_fake_quant_error_bound(granularity, bits):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.normal(size=(16, 32)))
+    spec = QuantSpec(bits=bits, granularity=granularity, group_size=8)
+    s, z = compute_scale(x, spec)
+    y = fake_quant(x, s, z, spec)
+    # quantization error bounded by scale/2 within the clip range
+    err = jnp.abs(y - jnp.clip(x, -jnp.abs(x).max(), jnp.abs(x).max()))
+    assert float(err.max()) <= float(jnp.max(s)) * 0.5 + 1e-9
+
+
+def test_quant_idempotent():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16)))
+    spec = QuantSpec(bits=4)
+    s, z = compute_scale(x, spec)
+    y1 = fake_quant(x, s, z, spec)
+    y2 = fake_quant(y1, s, z, spec)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-9)
+
+
+def test_pot_scales_are_pow2():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 16)) * 3)
+    spec = QuantSpec(bits=3, pot=True, granularity="per_channel")
+    s, _ = compute_scale(x, spec)
+    logs = np.log2(np.asarray(s))
+    np.testing.assert_allclose(logs, np.round(logs), atol=1e-9)
+
+
+def test_narrow_range():
+    spec = QuantSpec(bits=4, narrow=True)
+    assert spec.qmin == -7 and spec.qmax == 7
+    spec2 = QuantSpec(bits=4, narrow=False)
+    assert spec2.qmin == -8 and spec2.qmax == 7
+    spec3 = QuantSpec(bits=4, signed=False)
+    assert spec3.qmin == 0 and spec3.qmax == 15
+
+
+def test_asymmetric_zero_point():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(2.0, 5.0, size=(64,)))   # skewed positive
+    spec = QuantSpec(bits=4, signed=False, symmetric=False)
+    s, z = compute_scale(x, spec)
+    y = fake_quant(x, s, z, spec)
+    # asymmetric quant must cover the range well
+    assert float(jnp.abs(y - x).max()) <= float(jnp.squeeze(s)) * 0.5 + 1e-6
+
+
+def test_ste_gradient():
+    spec = QuantSpec(bits=4)
+    x = jnp.linspace(-2, 2, 64)
+    s, z = compute_scale(x, spec)
+
+    def f(x):
+        return jnp.sum(fake_quant(x, s, z, spec) ** 2)
+    g = jax.grad(f)(x)
+    assert bool(jnp.isfinite(g).all())
+    # inside the range, gradient ≈ 2x (identity STE)
+    mid = jnp.abs(x) < 1.0
+    np.testing.assert_allclose(np.asarray(g)[np.asarray(mid)],
+                               2 * np.asarray(x)[np.asarray(mid)],
+                               atol=float(jnp.squeeze(s)) * 2 + 1e-3)
+
+
+@given(st.integers(2, 8), st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_int_range_respected(bits, signed):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.normal(size=(128,)) * 10)
+    spec = QuantSpec(bits=bits, signed=signed)
+    s, z = compute_scale(x, spec)
+    q = quantize_int(x, s, z, spec)
+    assert float(q.min()) >= spec.qmin and float(q.max()) <= spec.qmax
+
+
+def test_minmax_observer():
+    spec = QuantSpec(bits=8)
+    obs = MinMaxObserver(spec)
+    obs.update(np.array([-2.0, 1.0]))
+    obs.update(np.array([0.5, 3.0]))
+    s, z = obs.scale_zp()
+    assert np.isclose(float(np.squeeze(s)), 3.0 / 127)
+
+
+def test_percentile_observer_rejects_outliers():
+    spec = QuantSpec(bits=8)
+    obs = PercentileObserver(spec, percentile=1.0)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(10000,))
+    x[0] = 1000.0                     # outlier
+    obs.update(x)
+    s, _ = obs.scale_zp()
+    assert float(np.squeeze(s)) < 0.1  # not dominated by the outlier

@@ -1,0 +1,140 @@
+"""Property-based tests of SIRA's core invariants (hypothesis).
+
+Soundness: for randomly generated QNN graphs and random inputs inside the
+declared range, every intermediate tensor value lies inside its SIRA
+range.  Transform equivalence: streamlining and threshold conversion never
+change graph semantics.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, ScaledIntRange, analyze,
+                        convert_tails_to_thresholds, streamline)
+from repro.core.verify import verify_ranges
+
+
+def _random_qnn(seed: int, n_layers: int, wbits: int, abits: int,
+                with_bn: bool, signed_in: bool) -> Graph:
+    rng = np.random.default_rng(seed)
+    g = Graph(inputs=["X"], outputs=[])
+    dims = [int(rng.integers(2, 6)) for _ in range(n_layers + 1)]
+    s_in = g.add_initializer(0.1 + float(rng.random()), "s_in")
+    zp = g.add_initializer(0.0)
+    bits = g.add_initializer(8.0)
+    g.add_node("Quant", ["X", s_in, zp, bits], ["Xq"],
+               dict(signed=int(signed_in), narrow=0))
+    x = "Xq"
+    for li in range(n_layers):
+        k, m = dims[li], dims[li + 1]
+        W = rng.normal(size=(k, m))
+        w = g.add_initializer(W, f"W{li}")
+        sw = np.maximum(np.abs(W).max(axis=0) / (2 ** (wbits - 1) - 1),
+                        1e-6)
+        swn = g.add_initializer(sw, f"sw{li}")
+        zpw = g.add_initializer(0.0)
+        bw = g.add_initializer(float(wbits))
+        g.add_node("Quant", [w, swn, zpw, bw], [f"Wq{li}"],
+                   dict(signed=1, narrow=0))
+        g.add_node("MatMul", [x, f"Wq{li}"], [f"mm{li}"])
+        x = f"mm{li}"
+        if with_bn:
+            mv = g.add_initializer(
+                np.abs(rng.normal(size=(m,))) * 0.5 + 0.1)
+            nv = g.add_initializer(rng.normal(size=(m,)) * 0.3)
+            g.add_node("Mul", [x, mv], [f"bnm{li}"])
+            g.add_node("Add", [f"bnm{li}", nv], [f"bn{li}"])
+            x = f"bn{li}"
+        g.add_node("Relu", [x], [f"act{li}"])
+        sa = g.add_initializer(0.05 + 0.2 * float(rng.random()))
+        zpa = g.add_initializer(0.0)
+        ba = g.add_initializer(float(abits))
+        g.add_node("Quant", [f"act{li}", sa, zpa, ba], [f"q{li}"],
+                   dict(signed=0, narrow=0))
+        x = f"q{li}"
+    g.outputs = [x]
+    return g
+
+
+@given(seed=st.integers(0, 10_000), n_layers=st.integers(1, 3),
+       wbits=st.sampled_from([2, 3, 4]), abits=st.sampled_from([2, 3, 4]),
+       with_bn=st.booleans(), signed_in=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_sira_soundness(seed, n_layers, wbits, abits, with_bn, signed_in):
+    g = _random_qnn(seed, n_layers, wbits, abits, with_bn, signed_in)
+    lo = -2.0 if signed_in else 0.0
+    inp = {"X": ScaledIntRange(lo=np.asarray(lo), hi=np.asarray(2.0))}
+    ranges = analyze(g, inp)
+    rng = np.random.default_rng(seed + 1)
+    k = None
+    for n in g.nodes:
+        if n.op_type == "MatMul":
+            k = g.initializers["W0"].shape[0]
+            break
+    dataset = [{"X": rng.uniform(lo, 2.0, size=(4, k))} for _ in range(8)]
+    report = verify_ranges(g, ranges, dataset)
+    assert report.contained, report.violations[:3]
+
+
+@given(seed=st.integers(0, 10_000), n_layers=st.integers(1, 3),
+       wbits=st.sampled_from([2, 3, 4]), abits=st.sampled_from([2, 3]),
+       with_bn=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_streamline_equivalence(seed, n_layers, wbits, abits, with_bn):
+    g = _random_qnn(seed, n_layers, wbits, abits, with_bn, True)
+    inp = {"X": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
+    res = streamline(g, inp)
+    rng = np.random.default_rng(seed + 2)
+    k = g.initializers["W0"].shape[0]
+    for _ in range(5):
+        x = rng.uniform(-2, 2, size=(3, k))
+        y0 = g.execute({"X": x})[g.outputs[0]]
+        y1 = res.graph.execute({"X": x})[res.graph.outputs[0]]
+        np.testing.assert_allclose(y0, y1, rtol=1e-9, atol=1e-9)
+
+
+@given(seed=st.integers(0, 10_000), wbits=st.sampled_from([2, 3]),
+       abits=st.sampled_from([2, 3]), with_bn=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_threshold_equivalence(seed, wbits, abits, with_bn):
+    g = _random_qnn(seed, 2, wbits, abits, with_bn, True)
+    inp = {"X": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
+    res = streamline(g, inp)
+    g2, specs = convert_tails_to_thresholds(res.graph, inp)
+    assert len(specs) >= 1
+    rng = np.random.default_rng(seed + 3)
+    k = g.initializers["W0"].shape[0]
+    for _ in range(5):
+        x = rng.uniform(-2, 2, size=(3, k))
+        y0 = g.execute({"X": x})[g.outputs[0]]
+        y1 = g2.execute({"X": x})[g2.outputs[0]]
+        np.testing.assert_allclose(y0, y1, rtol=1e-9, atol=1e-9)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_accumulator_fit_property(seed):
+    """Integer matmul outputs always fit the SIRA accumulator width, and
+    SIRA width <= datatype-bound width."""
+    from repro.core import minimize_accumulators
+    g = _random_qnn(seed, 2, 4, 4, True, True)
+    inp = {"X": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
+    res = streamline(g, inp)
+    ranges = analyze(res.graph, inp)
+    reps = minimize_accumulators(res.graph, inp, ranges=ranges)
+    assert reps, "no integer matmuls revealed"
+    rng = np.random.default_rng(seed + 4)
+    k = g.initializers["W0"].shape[0]
+    mm_nodes = [n for n in res.graph.nodes if n.op_type == "MatMul"]
+    by_name = {r.node_name: r for r in reps}
+    for _ in range(5):
+        x = rng.uniform(-2, 2, size=(4, k))
+        env = res.graph.execute({"X": x}, record_all=True)
+        for n in mm_nodes:
+            if n.name not in by_name:
+                continue
+            acc = env[n.outputs[0]]
+            P = by_name[n.name].sira_bits
+            assert np.all(acc >= -(2 ** (P - 1)))
+            assert np.all(acc <= 2 ** (P - 1) - 1)
+            assert P <= by_name[n.name].datatype_bits

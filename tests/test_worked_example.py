@@ -1,0 +1,166 @@
+"""The paper's worked example (§3.3, Fig 7/9, Tables 2/3): hand-derived
+values checked exactly, then streamlining + thresholding equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import (Graph, ScaledIntRange, analyze,
+                        convert_tails_to_thresholds, minimize_accumulators,
+                        streamline)
+
+
+@pytest.fixture()
+def example():
+    g = Graph(inputs=["X"], outputs=["Y"])
+    qs_X = g.add_initializer(0.7, "qs_X")
+    zp = g.add_initializer(0.0, "zp0")
+    b4 = g.add_initializer(4.0, "b4")
+    g.add_node("Quant", ["X", qs_X, zp, b4], ["Xq"],
+               dict(signed=1, narrow=0))
+    W = g.add_initializer(np.array([[-2.10, 5.00, -1.30],
+                                    [3.10, 0.00, -3.20]]), "W")
+    qs_W = g.add_initializer(np.array([0.20, 0.30, 0.10]), "qs_W")
+    zp2 = g.add_initializer(0.0, "zp1")
+    b4b = g.add_initializer(4.0, "b4b")
+    g.add_node("Quant", [W, qs_W, zp2, b4b], ["Wq"],
+               dict(signed=1, narrow=0))
+    g.add_node("MatMul", ["Xq", "Wq"], ["mm"])
+    B = g.add_initializer(np.array([-3.30, 1.20, 0.50]), "B")
+    g.add_node("Add", ["mm", B], ["gemm"])
+    M = g.add_initializer(np.array([0.60, 0.20, 0.40]), "M")
+    g.add_node("Mul", ["gemm", M], ["bn_m"])
+    N = g.add_initializer(np.array([-0.20, -0.40, 1.10]), "N")
+    g.add_node("Add", ["bn_m", N], ["bn"])
+    g.add_node("Relu", ["bn"], ["act"])
+    qs_Y = g.add_initializer(0.10, "qs_Y")
+    zp3 = g.add_initializer(0.0, "zp2")
+    b4c = g.add_initializer(4.0, "b4c")
+    g.add_node("Quant", ["act", qs_Y, zp3, b4c], ["Y"],
+               dict(signed=0, narrow=0))
+    x_range = ScaledIntRange(lo=np.array([-5.10, -3.80]),
+                             hi=np.array([5.10, 3.80]))
+    return g, {"X": x_range}
+
+
+def test_quant_ranges(example):
+    g, inp = example
+    r = analyze(g, inp)["Xq"]
+    # round(5.1/0.7)=7, round(3.8/0.7)=5 (clip to [-8, 7])
+    np.testing.assert_array_equal(r.int_lo, [-7, -5])
+    np.testing.assert_array_equal(r.int_hi, [7, 5])
+    assert float(r.scale) == 0.7 and float(np.asarray(r.bias)) == 0.0
+
+
+def test_weight_quant_point(example):
+    g, inp = example
+    r = analyze(g, inp)["Wq"]
+    assert r.is_point and r.is_scaled_int
+    # W / qs_W rounded, clipped to [-8, 7]:
+    # col0: -2.1/.2=-10.5→-8 ; 3.1/.2=15.5→7 (clipped)
+    np.testing.assert_array_equal(r.int_lo,
+                                  [[-8, 7, -8], [7, 0, -8]])
+
+
+def test_matmul_scaled_int(example):
+    g, inp = example
+    r = analyze(g, inp)["mm"]
+    assert r.is_scaled_int
+    # s_Y = s_X * s_W = 0.7 * (0.2, 0.3, 0.1)
+    np.testing.assert_allclose(r.scale, [0.14, 0.21, 0.07])
+    # integer accumulator range: dot of q_W with q_x in [(-7,-5), (7,5)]
+    # col0: |(-8,7)| against (7,5): max = 8*7 + 7*5 = 91
+    np.testing.assert_array_equal(r.int_lo, [-91, -49, -96])
+    np.testing.assert_array_equal(r.int_hi, [91, 49, 96])
+
+
+def test_bn_aggregated_scale(example):
+    g, inp = example
+    r = analyze(g, inp)["bn"]
+    assert r.is_scaled_int
+    # scale picks up BN multiplier M
+    np.testing.assert_allclose(
+        r.scale, np.array([0.14, 0.21, 0.07]) * np.array([0.6, 0.2, 0.4]))
+    # bias: (B * M) + N
+    np.testing.assert_allclose(
+        r.bias, np.array([-3.3, 1.2, 0.5]) * np.array([0.6, 0.2, 0.4])
+        + np.array([-0.2, -0.4, 1.1]))
+
+
+def test_output_quant_range(example):
+    g, inp = example
+    r = analyze(g, inp)["Y"]
+    assert r.is_scaled_int
+    assert float(r.scale) == 0.1
+    assert np.all(r.int_lo == 0) and np.all(r.int_hi == 15)  # u4
+
+
+def test_streamline_structure_and_equivalence(example):
+    g, inp = example
+    res = streamline(g, inp)
+    ops = [n.op_type for n in res.graph.nodes]
+    # Fig 9 structure: Div→Quant→MatMul→Mul→Add→Relu→Div→Quant→Mul
+    assert ops == ["Div", "Quant", "MatMul", "Mul", "Add", "Relu", "Div",
+                   "Quant", "Mul"]
+    # the MatMul operands are pure integers
+    ranges = analyze(res.graph, inp)
+    mm = [n for n in res.graph.nodes if n.op_type == "MatMul"][0]
+    for t in mm.inputs:
+        r = ranges[t]
+        assert r.is_scaled_int and np.all(r.scale == 1.0) \
+            and np.all(r.bias == 0.0)
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        x = rng.uniform(-1, 1, size=(5, 2)) * np.array([5.1, 3.8])
+        y0 = g.execute({"X": x})["Y"]
+        y1 = res.graph.execute({"X": x})[res.graph.outputs[0]]
+        np.testing.assert_allclose(y0, y1, rtol=1e-12, atol=1e-12)
+
+
+def test_accumulator_bits(example):
+    g, inp = example
+    res = streamline(g, inp)
+    reps = minimize_accumulators(res.graph, inp)
+    assert len(reps) == 1
+    # max |acc| = 96 → ceil(log2(97)) + 1 = 8 bits
+    assert reps[0].sira_bits == 8
+    assert reps[0].sira_bits <= reps[0].datatype_bits
+
+
+def test_threshold_conversion_exact(example):
+    g, inp = example
+    res = streamline(g, inp)
+    g2, specs = convert_tails_to_thresholds(res.graph, inp)
+    assert len(specs) == 1
+    assert specs[0].thresholds.shape == (3, 15)     # 3 ch, 2^4-1 steps
+    ops = [n.op_type for n in g2.nodes]
+    assert "MultiThreshold" in ops and "Relu" not in ops
+    # exact equality on EVERY reachable integer input
+    ranges = analyze(res.graph, inp)
+    mm_out = [n for n in res.graph.nodes
+              if n.op_type == "MatMul"][0].outputs[0]
+    r = ranges[mm_out]
+    lo, hi = int(np.min(r.int_lo)), int(np.max(r.int_hi))
+    xs = np.arange(lo, hi + 1, dtype=np.float64)
+    X = np.stack([xs] * 3, axis=1)                  # (R, 3) per channel
+    # evaluate original tail vs MultiThreshold on the raw integer inputs
+    sub_orig = _tail_exec(res.graph, mm_out, X)
+    sub_thr = _tail_exec(g2, mm_out, X)
+    np.testing.assert_array_equal(sub_orig, sub_thr)
+
+
+def _tail_exec(g: Graph, start: str, x: np.ndarray) -> np.ndarray:
+    """Execute the graph downstream of ``start`` feeding x directly."""
+    gg = g.copy()
+    gg.toposort()
+    upstream = {start}
+    changed = True
+    while changed:
+        changed = False
+        for n in gg.nodes:
+            if set(n.outputs) & upstream:
+                new = set(n.inputs) - set(gg.initializers) - upstream
+                if new or not set(n.inputs).issubset(upstream):
+                    upstream |= set(n.inputs)
+                    changed = True
+    gg.nodes = [n for n in gg.nodes if not (set(n.outputs) & upstream)]
+    gg.inputs = [start]
+    return gg.execute({start: x})[gg.outputs[0]]
