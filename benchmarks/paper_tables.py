@@ -95,9 +95,9 @@ def t1_qat_scales() -> List[Row]:
 
 def t3_worked_example() -> List[Row]:
     """SIRA ranges on the paper's worked example (§3.3) + transform time."""
-    from repro.core import ScaledIntRange, analyze, streamline
+    from repro.core import (ScaledIntRange, SiraModel, Streamline, analyze,
+                            Graph)
     from tests.test_worked_example import example as _  # noqa: F401  (doc)
-    from repro.core import Graph
 
     g = Graph(inputs=["X"], outputs=["Y"])
     qs_X = g.add_initializer(0.7, "qs_X")
@@ -125,9 +125,10 @@ def t3_worked_example() -> List[Row]:
                ["Y"], dict(signed=0))
     inp = {"X": ScaledIntRange(lo=np.array([-5.10, -3.80]),
                                hi=np.array([5.10, 3.80]))}
+    model = SiraModel(g, inp)
     us_analyze = _timeit(lambda: analyze(g, inp), n=10)
-    us_stream = _timeit(lambda: streamline(g, inp), n=10)
-    r = analyze(g, inp)["mm"]
+    us_stream = _timeit(lambda: model.transform(Streamline()), n=10)
+    r = model.ranges["mm"]
     return [
         ("t3_sira_analysis", us_analyze,
          f"mm_int_range=[{int(r.int_lo.min())},{int(r.int_hi.max())}]"),
@@ -157,9 +158,9 @@ def t4_elementwise_model() -> List[Row]:
 
 def t6_workloads() -> List[Row]:
     """End-to-end QNN workloads (Table 6 analogue): SIRA opts on the four
-    paper topologies; LUT deltas projected via the analytical models."""
-    from repro.core import (analyze, convert_tails_to_thresholds,
-                            minimize_accumulators, streamline, summarize)
+    paper topologies via one build_flow; LUT deltas projected via the
+    analytical models."""
+    from repro.core import build_flow, summarize
     from repro.core.costmodel import (lut_composite_total,
                                       lut_threshold_total, tpu_tail_bytes)
     from repro.core.workloads import WORKLOADS
@@ -170,10 +171,10 @@ def t6_workloads() -> List[Row]:
     for name, maker in WORKLOADS.items():
         wl = maker()
         t0 = time.perf_counter()
-        res = streamline(wl.graph, wl.input_range)
-        reps = minimize_accumulators(res.graph, wl.input_range)
-        g2, specs = convert_tails_to_thresholds(res.graph, wl.input_range)
+        result = build_flow(wl)
         us = (time.perf_counter() - t0) * 1e6
+        reps = result.accumulator_reports
+        specs = result.threshold_specs
         s = summarize(reps)
         pe, C = 4, 128
         # projected layer-tail LUTs: baseline composite at datatype-bound
@@ -223,17 +224,19 @@ def t7_layer_tails() -> List[Row]:
 
 def f22_accumulators() -> List[Row]:
     """Accumulator width histograms (Fig 22): paper QNNs + LM arch blocks."""
-    from repro.core import minimize_accumulators, streamline, summarize
+    from repro.core import (MinimizeAccumulators, SiraModel, Streamline,
+                            summarize)
     from repro.core.workloads import WORKLOADS
     from repro.models.export import export_block_graph
     from repro.configs import get_config, list_archs
 
+    pipeline = (Streamline(), MinimizeAccumulators())
     rows: List[Row] = []
     all_s, all_d = [], []
     for name, maker in WORKLOADS.items():
         wl = maker()
-        res = streamline(wl.graph, wl.input_range)
-        reps = minimize_accumulators(res.graph, wl.input_range)
+        model = SiraModel.from_workload(wl).transform(*pipeline)
+        reps = model.metadata["accumulator_reports"]
         s = summarize(reps)
         all_s += [r.sira_bits for r in reps]
         all_d += [r.datatype_bits for r in reps]
@@ -247,8 +250,8 @@ def f22_accumulators() -> List[Row]:
             g, inp = export_block_graph(cfg, w_bits=4, a_bits=4)
         except NotImplementedError:
             continue
-        res = streamline(g, inp)
-        reps = minimize_accumulators(res.graph, inp)
+        model = SiraModel(g, inp, name=arch).transform(*pipeline)
+        reps = model.metadata["accumulator_reports"]
         if not reps:
             continue
         s = summarize(reps)

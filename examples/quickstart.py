@@ -1,31 +1,41 @@
-"""Quickstart: SIRA on a quantized MLP — analyze, streamline, threshold,
-minimize accumulators, and run the integer pipeline with the TPU kernels.
+"""Quickstart: SIRA on a quantized MLP with the SiraModel pass pipeline —
+analyze, streamline, threshold, minimize accumulators, verify, all driven
+by one declarative build flow with a cached range analysis.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (ScaledIntRange, analyze, convert_tails_to_thresholds,
-                        minimize_accumulators, streamline, summarize)
+from repro.core import SiraModel, build_flow, summarize
 from repro.core.workloads import make_tfc
 
 
 def main() -> None:
     wl = make_tfc()
-    print(f"=== {wl.name}: {len(wl.graph.nodes)} nodes ===")
+    model = SiraModel.from_workload(wl)
+    print(f"=== {model.name}: {len(model.graph.nodes)} nodes ===")
 
-    # 1) SIRA analysis: ranges, scales, biases for every tensor
-    ranges = analyze(wl.graph, wl.input_range)
-    n_si = sum(r.is_scaled_int for r in ranges.values())
-    print(f"SIRA: {len(ranges)} tensors analyzed, {n_si} scaled-integer")
+    # 1) SIRA analysis: ranges, scales, biases for every tensor — computed
+    #    once, cached on the model, invalidated only by graph mutation
+    n_si = sum(r.is_scaled_int for r in model.ranges.values())
+    print(f"SIRA: {len(model.ranges)} tensors analyzed, "
+          f"{n_si} scaled-integer")
 
-    # 2) streamlining: aggregate scales/biases → integer MatMul kernels
-    res = streamline(wl.graph, wl.input_range)
-    print(f"streamlined: {len(wl.graph.nodes)} → {len(res.graph.nodes)} "
-          f"nodes, {len(res.erased)} scale/bias constants aggregated")
+    # 2) the whole optimization pipeline as one declarative flow
+    #    (explicitize → aggregate → threshold → accumulators → verify),
+    #    with per-step numerical-equivalence checks armed
+    result = build_flow(model, verify="equivalence")
+    for step in result.steps:
+        print(f"  step {step.name:28s} modified={str(step.modified):5s} "
+              f"analyses={step.analysis_calls} {step.seconds * 1e3:7.1f} ms")
+    print(f"streamlined: {len(wl.graph.nodes)} → "
+          f"{len(result.graph.nodes)} nodes, "
+          f"{len(result.aggregation.erased)} scale/bias constants "
+          f"aggregated, {len(result.threshold_specs)} layer tails "
+          f"collapsed to MultiThreshold nodes")
 
-    # 3) accumulator minimization (paper §4.2)
-    reps = minimize_accumulators(res.graph, wl.input_range)
+    # 3) accumulator minimization (paper §4.2) — report from the flow
+    reps = result.accumulator_reports
     s = summarize(reps)
     for r in reps:
         print(f"  {r.op_type} K={r.K}: SIRA {r.sira_bits}b vs "
@@ -33,16 +43,15 @@ def main() -> None:
     print(f"accumulators: {s['reduction_vs_datatype']:.0%} below the "
           f"datatype bound (paper: 22%)")
 
-    # 4) threshold conversion (paper §4.1.3)
-    g2, specs = convert_tails_to_thresholds(res.graph, wl.input_range)
-    print(f"thresholding: {len(specs)} layer tails collapsed to "
-          f"MultiThreshold nodes")
+    # 4) empirical verification (paper §6.1) ran as the final flow step
+    print(f"verification: contained={result.verification.contained} over "
+          f"{len(result.verification.observed)} tensors")
 
     # 5) equivalence: the whole pipeline is numerically exact
     rng = np.random.default_rng(0)
     x = np.abs(rng.uniform(0, 1, size=wl.input_shape))
     y0 = wl.graph.execute({"X": x})[wl.graph.outputs[0]]
-    y2 = g2.execute({"X": x})[g2.outputs[0]]
+    y2 = result.graph.execute({"X": x})[result.graph.outputs[0]]
     assert np.allclose(y0, y2), "pipeline must be exact"
     print("equivalence: original == streamlined+thresholded (exact)")
 

@@ -1,5 +1,6 @@
 """SIRA analysis report for any assigned architecture: accumulator widths,
-layer-tail implementation choice, and FPGA/TPU cost projections.
+layer-tail implementation choice, and FPGA/TPU cost projections — driven
+by the SiraModel pass pipeline.
 
     PYTHONPATH=src python examples/sira_report.py --arch glm4-9b
 """
@@ -8,7 +9,8 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.core import minimize_accumulators, streamline, summarize
+from repro.core import (MinimizeAccumulators, SiraModel, Streamline,
+                        summarize)
 from repro.core.costmodel import select_tail_style, tail_cost
 from repro.models.export import export_block_graph
 
@@ -24,8 +26,9 @@ def main() -> None:
     print(f"=== SIRA report: {args.arch} (reduced block, "
           f"w{args.w_bits}a{args.a_bits}) ===")
     g, inp = export_block_graph(cfg, w_bits=args.w_bits, a_bits=args.a_bits)
-    res = streamline(g, inp)
-    reps = minimize_accumulators(res.graph, inp)
+    model = SiraModel(g, inp, name=args.arch).transform(
+        Streamline(), MinimizeAccumulators())
+    reps = model.metadata["accumulator_reports"]
     print(f"{'kernel':28s} {'K':>6s} {'SIRA':>5s} {'dtype':>6s} {'save':>6s}")
     for r in reps:
         print(f"{r.node_name:28s} {r.K:6d} {r.sira_bits:4d}b "

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite, fail-fast, from the repo root.
+#   bash scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

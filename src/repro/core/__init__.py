@@ -1,9 +1,24 @@
-"""SIRA core: scaled-integer range analysis and FDNA-style optimizations."""
+"""SIRA core: scaled-integer range analysis and FDNA-style optimizations.
+
+New (preferred) API — ``SiraModel`` + transformation passes + build flow:
+
+    from repro.core import SiraModel, build_flow
+    result = build_flow(SiraModel.from_workload(make_tfc()))
+
+The loose functions (``analyze``, ``streamline``,
+``convert_tails_to_thresholds``, ``minimize_accumulators``,
+``verify_ranges``) remain as deprecated shims over the pass pipeline.
+"""
 from .intervals import ScaledIntRange                      # noqa: F401
+from .ops import (OpDef, OP_REGISTRY, register_op, get_op,  # noqa: F401
+                  EXEC_REGISTRY, PROP_REGISTRY, COST_REGISTRY)
 from .graph import Graph, Node, quant_bounds               # noqa: F401
-from .propagate import SIRA, analyze, POISON               # noqa: F401
+from .propagate import (SIRA, analyze, analysis_calls,     # noqa: F401
+                        POISON)
+from .model import SiraModel                               # noqa: F401
 from .streamline import (streamline, aggregate_scales_biases,   # noqa: F401
-                         explicitize_quantizers, remove_identity_ops)
+                         explicitize_quantizers, remove_identity_ops,
+                         AggregationResult)
 from .thresholds import (convert_tails_to_thresholds,      # noqa: F401
                          find_layer_tails, extract_thresholds)
 from .accumulator import (minimize_accumulators, datatype_bound_bits,  # noqa: F401
@@ -11,3 +26,12 @@ from .accumulator import (minimize_accumulators, datatype_bound_bits,  # noqa: F
                           exact_worst_case_bits)
 from . import costmodel                                    # noqa: F401
 from .verify import verify_ranges, instrument, stuck_channels  # noqa: F401
+from .passes import (Transformation, Fixpoint, Sequence,   # noqa: F401
+                     FunctionTransformation, ExplicitizeQuantizers,
+                     DuplicateSharedConstants, AggregateScalesBiases,
+                     RemoveIdentityOps, Streamline,
+                     ConvertTailsToThresholds, MinimizeAccumulators,
+                     VerifyRanges, VerificationError)
+from .flow import (BuildConfig, BuildResult, StepReport,   # noqa: F401
+                   build_flow, register_step, STEP_REGISTRY,
+                   DEFAULT_STEPS)

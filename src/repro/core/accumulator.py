@@ -34,8 +34,9 @@ def datatype_bound_bits(K: int, input_bits: int, weight_bits: int,
     """Colbert et al. datatype-bound accumulator width (paper §4.2).
 
     ``input_bits``-bit (default unsigned) inputs, ``weight_bits``-bit signed
-    weights, K-element dot product."""
-    N = input_bits if not input_signed else input_bits  # magnitude bits incl.
+    weights, K-element dot product.  Signed inputs spend one bit on the
+    sign, so only ``input_bits - 1`` magnitude bits enter alpha."""
+    N = input_bits if not input_signed else input_bits - 1
     alpha = np.log2(K) + N + weight_bits - 1
     phi = np.log2(1.0 + 2.0 ** (-alpha))
     return int(np.ceil(alpha + phi + 1))
@@ -138,12 +139,13 @@ def minimize_accumulators(g: Graph,
                 return (input_bits, signed_default)
         dyn = rs_in[0] if not rs_in[0].is_point else rs_in[1]
         wgt = rs_in[1] if not rs_in[1].is_point else rs_in[0]
-        n_bits, _ = _bits(dyn, False)
+        n_bits, n_signed = _bits(dyn, False)
         m_bits, _ = _bits(wgt, True)
         reports.append(AccumulatorReport(
             node_name=node.name, op_type=node.op_type, K=K,
             sira_bits=sira_bits(r_out),
-            datatype_bits=datatype_bound_bits(K, n_bits, m_bits)))
+            datatype_bits=datatype_bound_bits(K, n_bits, m_bits,
+                                              input_signed=n_signed)))
     return reports
 
 

@@ -11,13 +11,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-# Table 4: LUT = alpha * f(n_i, n_p) * PE + beta
-ELEMENTWISE_COEFFS = {
-    "Mul":   dict(alpha=1.18, beta=124),
-    "Add":   dict(alpha=2.0,  beta=24),
-    "ToInt": dict(alpha=4.2,  beta=13),
-    "Max":   dict(alpha=4.0,  beta=21),
-}
+from .ops import COST_REGISTRY, register_op
+
+# Table 4: LUT = alpha * f(n_i, n_p) * PE + beta.  Coefficients live in the
+# unified per-op registry (ops.OP_REGISTRY); ELEMENTWISE_COEFFS is the
+# legacy dict-compatible view over them.  "ToInt" and "Max" are meta-kernel
+# styles rather than graph op types, registered cost-only.
+register_op("Mul", cost=dict(alpha=1.18, beta=124))
+register_op("Add", cost=dict(alpha=2.0, beta=24))
+register_op("ToInt", cost=dict(alpha=4.2, beta=13))
+register_op("Max", cost=dict(alpha=4.0, beta=21))
+
+ELEMENTWISE_COEFFS = COST_REGISTRY
 
 
 def lut_mul(n_i: int, n_p: int, pe: int) -> float:

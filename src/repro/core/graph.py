@@ -21,6 +21,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .ops import EXEC_REGISTRY, register_op  # noqa: F401  (re-exported)
+
 Array = np.ndarray
 
 
@@ -50,10 +52,47 @@ class Node:
 
 class Graph:
     def __init__(self, inputs: Sequence[str] = (), outputs: Sequence[str] = ()):
-        self.nodes: List[Node] = []
+        self._version = 0
+        self._nodes: List[Node] = []
         self.initializers: Dict[str, Array] = {}
         self.inputs: List[str] = list(inputs)
         self.outputs: List[str] = list(outputs)
+        # lazily-built producer/consumer maps, keyed on cache_key
+        self._idx_version = None
+        self._producers: Dict[str, Node] = {}
+        self._consumers: Dict[str, List[Node]] = {}
+
+    # ----------------------------------------------------------- versioning
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter.  ``SiraModel`` keys its cached range
+        analysis on this; every structural edit made through the Graph API
+        bumps it.  ``nodes`` returns the *live* internal list — code that
+        mutates it directly (``g.nodes.append(...)``) or edits
+        ``node.inputs`` / initializer values in place must call ``touch()``.
+        As a safety net, cache consumers key on ``cache_key`` (version,
+        node count), which also catches raw list append/remove."""
+        return self._version
+
+    @property
+    def cache_key(self) -> Tuple[int, int]:
+        return (self._version, len(self._nodes))
+
+    def touch(self) -> None:
+        """Mark the graph as mutated (invalidates indexes and any cached
+        analysis).  Call after editing ``node.inputs``/``node.outputs`` or
+        initializer *values* in place — the editing methods below call it
+        automatically."""
+        self._version += 1
+
+    @property
+    def nodes(self) -> List[Node]:
+        return self._nodes
+
+    @nodes.setter
+    def nodes(self, value: Sequence[Node]) -> None:
+        self._nodes = list(value)
+        self.touch()
 
     # -------------------------------------------------------------- editing
     def add_node(self, op_type: str, inputs: Sequence[str],
@@ -64,33 +103,59 @@ class Graph:
             outputs = [fresh_name(op_type.lower() + "_out")]
         node = Node(op_type, list(inputs), list(outputs), dict(attrs or {}),
                     name=name)
-        self.nodes.append(node)
+        self._nodes.append(node)
+        self.touch()
         return node
 
     def add_initializer(self, value, name: Optional[str] = None) -> str:
         name = name or fresh_name("const")
         self.initializers[name] = np.asarray(value, dtype=np.float64)
+        self.touch()
         return name
 
     def is_constant(self, tensor: str) -> bool:
         return tensor in self.initializers
 
+    def _index(self) -> None:
+        if self._idx_version == self.cache_key:
+            return
+        producers: Dict[str, Node] = {}
+        consumers: Dict[str, List[Node]] = {}
+        for n in self._nodes:
+            for t in n.outputs:
+                if t not in producers:
+                    producers[t] = n
+            for t in set(n.inputs):
+                consumers.setdefault(t, []).append(n)
+        self._producers = producers
+        self._consumers = consumers
+        self._idx_version = self.cache_key
+
     def producer(self, tensor: str) -> Optional[Node]:
-        for n in self.nodes:
-            if tensor in n.outputs:
-                return n
-        return None
+        self._index()
+        return self._producers.get(tensor)
 
     def consumers(self, tensor: str) -> List[Node]:
-        return [n for n in self.nodes if tensor in n.inputs]
+        self._index()
+        return list(self._consumers.get(tensor, ()))
 
     def remove_node(self, node: Node) -> None:
-        self.nodes.remove(node)
+        self._nodes.remove(node)
+        self.touch()
+
+    def replace_input(self, old: str, new: str) -> None:
+        """Rewire every consumer of ``old`` (and the graph outputs) to read
+        ``new`` instead."""
+        for n in self.consumers(old):
+            n.inputs = [new if t == old else t for t in n.inputs]
+        if old in self.outputs:
+            self.outputs = [new if o == old else o for o in self.outputs]
+        self.touch()
 
     def toposort(self) -> None:
         """Stable topological sort of self.nodes."""
         produced = set(self.inputs) | set(self.initializers)
-        remaining = list(self.nodes)
+        remaining = list(self._nodes)
         ordered: List[Node] = []
         while remaining:
             progress = False
@@ -105,18 +170,22 @@ class Graph:
                            if i not in produced}
                 raise ValueError(f"graph has a cycle or dangling inputs: "
                                  f"{sorted(missing)[:5]}")
-        self.nodes = ordered
+        if ordered != self._nodes:     # already sorted → keep version (and
+            self.nodes = ordered       # any cached analysis) intact
 
     def dead_code_eliminate(self) -> None:
         live = set(self.outputs)
         keep: List[Node] = []
-        for n in reversed(self.nodes):
+        for n in reversed(self._nodes):
             if any(o in live for o in n.outputs):
                 keep.append(n)
                 live.update(n.inputs)
-        self.nodes = list(reversed(keep))
-        self.initializers = {k: v for k, v in self.initializers.items()
-                             if k in live}
+        keep = list(reversed(keep))
+        inits = {k: v for k, v in self.initializers.items() if k in live}
+        if keep != self._nodes or len(inits) != len(self.initializers):
+            self.nodes = keep
+            self.initializers = inits
+            self.touch()
 
     def copy(self) -> "Graph":
         g = Graph(self.inputs, self.outputs)
@@ -152,15 +221,12 @@ class Graph:
 
 
 # --------------------------------------------------------------------------
-# op executors
+# op executors (registered into the unified ops.OP_REGISTRY)
 # --------------------------------------------------------------------------
-
-EXEC_REGISTRY: Dict[str, Callable] = {}
-
 
 def executor(op_type: str):
     def deco(fn):
-        EXEC_REGISTRY[op_type] = fn
+        register_op(op_type, execute=fn)
         return fn
     return deco
 

@@ -1,0 +1,132 @@
+"""``SiraModel`` — the unit of work of the transformation pipeline.
+
+A ``SiraModel`` bundles a :class:`~repro.core.graph.Graph` with the input
+ranges SIRA needs and a **cached** range analysis that is invalidated only
+by graph mutation.  This mirrors the QONNX ``ModelWrapper`` + shared
+``range_analysis`` design the paper ships SIRA as: many transformations
+consume one analysis through a single entry point, so a pipeline of N
+read-only passes performs O(1) full propagations instead of O(N).
+
+Cache contract
+--------------
+``Graph`` bumps a monotonic ``version`` on every structural edit made
+through its API (``add_node``/``add_initializer``/``remove_node``/
+``nodes``-assignment/``replace_input``).  ``SiraModel.ranges`` recomputes
+iff the cached ``graph.cache_key`` (version, node count) differs — the
+node count also catches raw ``graph.nodes.append/remove`` mutations that
+bypass the API.  Code that edits ``node.inputs``, ``node.outputs`` or
+initializer *values* in place must call ``graph.touch()`` (all in-repo
+passes do).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import Graph
+from .intervals import ScaledIntRange
+from .propagate import analyze
+
+
+class SiraModel:
+    """Graph + input ranges + cached SIRA analysis + pass artifacts."""
+
+    def __init__(self, graph: Graph,
+                 input_ranges: Dict[str, ScaledIntRange],
+                 name: str = "",
+                 metadata: Optional[Dict[str, Any]] = None):
+        self.graph = graph
+        self.input_ranges: Dict[str, ScaledIntRange] = dict(input_ranges)
+        self.name = name
+        # free-form artifact store written by passes (threshold specs,
+        # accumulator reports, verification reports, ...)
+        self.metadata: Dict[str, Any] = dict(metadata or {})
+        self._ranges: Optional[Dict[str, ScaledIntRange]] = None
+        self._cache_version: Optional[Tuple[int, int]] = None
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def from_workload(cls, wl) -> "SiraModel":
+        """Wrap a :class:`~repro.core.workloads.QNNWorkload` (graph copied,
+        so the workload object stays pristine)."""
+        return cls(wl.graph.copy(), wl.input_range, name=wl.name,
+                   metadata=dict(input_shape=wl.input_shape,
+                                 weight_bits=wl.weight_bits,
+                                 act_bits=wl.act_bits))
+
+    def copy(self) -> "SiraModel":
+        m = SiraModel(self.graph.copy(), self.input_ranges, name=self.name,
+                      metadata=dict(self.metadata))
+        if self._ranges is not None and \
+                self._cache_version == self.graph.cache_key:
+            # graph.copy() is semantics-preserving → the analysis carries over
+            m._ranges = self._ranges
+            m._cache_version = m.graph.cache_key
+        return m
+
+    # -------------------------------------------------------------- analysis
+    @property
+    def ranges(self) -> Dict[str, ScaledIntRange]:
+        """Cached ``{tensor: ScaledIntRange}`` — recomputed only when the
+        graph has been mutated since the last analysis."""
+        if self._ranges is None or \
+                self._cache_version != self.graph.cache_key:
+            self._ranges = analyze(self.graph, self.input_ranges)
+            # analyze() toposorts, which may bump the version once
+            self._cache_version = self.graph.cache_key
+        return self._ranges
+
+    def range_of(self, tensor: str) -> Optional[ScaledIntRange]:
+        return self.ranges.get(tensor)
+
+    @property
+    def analysis_cached(self) -> bool:
+        return (self._ranges is not None and
+                self._cache_version == self.graph.cache_key)
+
+    def invalidate(self) -> None:
+        """Drop the cached analysis (automatic for API-mediated edits)."""
+        self._ranges = None
+        self._cache_version = None
+
+    # ------------------------------------------------------------- execution
+    def execute(self, feeds: Dict[str, np.ndarray],
+                want: Optional[Sequence[str]] = None,
+                record_all: bool = False) -> Dict[str, np.ndarray]:
+        return self.graph.execute(feeds, want=want, record_all=record_all)
+
+    def sample_inputs(self, rng=None, n: int = 1
+                      ) -> Iterable[Dict[str, np.ndarray]]:
+        """Random feed dicts drawn uniformly from the declared input ranges
+        (requires ``input_shape`` metadata, single-input graphs only)."""
+        shape = self.metadata.get("input_shape")
+        if shape is None or len(self.graph.inputs) != 1:
+            raise ValueError("sample_inputs needs metadata['input_shape'] "
+                             "and a single graph input")
+        rng = np.random.default_rng(0) if rng is None else rng
+        (inp,) = self.graph.inputs
+        r = self.input_ranges[inp]
+        # sample elementwise between the broadcast bounds — collapsing a
+        # per-channel range to its global hull would draw out-of-range
+        # values and spuriously fail strict verification
+        lo = np.broadcast_to(np.asarray(r.lo, dtype=np.float64), shape)
+        hi = np.broadcast_to(np.asarray(r.hi, dtype=np.float64), shape)
+        for _ in range(n):
+            yield {inp: rng.uniform(lo, hi, size=shape)}
+
+    # ----------------------------------------------------------- transforms
+    def transform(self, *transformations, copy: bool = True) -> "SiraModel":
+        """Apply transformations in sequence (each once; wrap one in
+        ``.fixpoint()`` for to-convergence application) and return the
+        resulting model.  ``copy=True`` (default) leaves ``self`` untouched.
+        """
+        model = self.copy() if copy else self
+        for tx in transformations:
+            model, _ = tx.apply(model)
+        return model
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        cached = "cached" if self.analysis_cached else "stale"
+        return (f"SiraModel({self.name or 'unnamed'}, "
+                f"{len(self.graph.nodes)} nodes, analysis={cached})")

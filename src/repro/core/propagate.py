@@ -28,16 +28,24 @@ from .graph import Graph, Node, quant_bounds, round_half_to_even
 from .intervals import (Array, ScaledIntRange, add_intervals, dot_interval,
                         dyn_dot_interval, monotonic_fn_interval,
                         mul_intervals)
+from .ops import PROP_REGISTRY, register_op  # noqa: F401  (re-exported)
 
 POISON = "!unerasable"
 
-PROP_REGISTRY: Dict[str, Callable] = {}
+# Full-analysis call counter.  ``SiraModel`` caches analysis results keyed
+# on the graph version; this counter lets tests (and build_flow step
+# reports) assert how many *full* range propagations actually ran.
+ANALYSIS_CALLS = 0
+
+
+def analysis_calls() -> int:
+    return ANALYSIS_CALLS
 
 
 def handler(*op_types: str):
     def deco(fn):
         for op in op_types:
-            PROP_REGISTRY[op] = fn
+            register_op(op, propagate=fn)
         return fn
     return deco
 
@@ -50,6 +58,8 @@ class SIRA:
 
     def run(self, input_ranges: Dict[str, ScaledIntRange]
             ) -> Dict[str, ScaledIntRange]:
+        global ANALYSIS_CALLS
+        ANALYSIS_CALLS += 1
         ranges: Dict[str, ScaledIntRange] = {}
         for name, val in self.graph.initializers.items():
             ranges[name] = ScaledIntRange.point(val)
@@ -315,6 +325,7 @@ def _prop_conv(node: Node, graph: Graph, rs: List[ScaledIntRange]):
     W = _const_val(rw)                       # (Cout, Cin_g, kh, kw)
     cout, cin_g, kh, kw = W.shape
     groups = int(node.attrs.get("groups", 1))
+    pad = int(node.attrs.get("pad", 0))
     cin = cin_g * groups
     depthwise = (groups == cin and cin_g == 1)
 
@@ -328,9 +339,15 @@ def _prop_conv(node: Node, graph: Graph, rs: List[ScaledIntRange]):
                 a.max(axis=tuple(i for i in range(a.ndim) if i != a.ndim - 3))
         return np.full((n_ch,), float(np.max(a)))
 
-    # per-input-channel bounds (hull over spatial dims)
+    # per-input-channel bounds (hull over spatial dims).  Zero-padding
+    # feeds literal zeros into border taps, so padded convs must widen the
+    # input interval to include 0 — otherwise a channel whose range sits
+    # strictly above (or below) zero gets an unsound output bound.
     x_lo_c = -chan(-rx.lo, cin)
     x_hi_c = chan(rx.hi, cin)
+    if pad:
+        x_lo_c = np.minimum(x_lo_c, 0.0)
+        x_hi_c = np.maximum(x_hi_c, 0.0)
 
     Wmat = W.reshape(cout, cin_g * kh * kw)
     if depthwise:
@@ -356,13 +373,19 @@ def _prop_conv(node: Node, graph: Graph, rs: List[ScaledIntRange]):
     sx_chan = (rx.is_scaled_int and rx.scale is not None and
                np.size(rx.scale) == cin)
     sw_ok = rw.is_scaled_int and np.all(rw.bias == 0)
-    can_si = rx.is_scaled_int and sw_ok and (
+    # padded zeros map to integer 0 only when the input bias is zero
+    # (x = s*q + b, pad value x=0 ⇒ q=0 iff b=0)
+    pad_ok = (pad == 0) or bool(np.all(np.asarray(rx.bias) == 0))
+    can_si = rx.is_scaled_int and sw_ok and pad_ok and (
         sx_scalar or (depthwise and sx_chan))
     out = None
     if can_si:
         qW = rw.int_lo
         qx_lo_c = -chan(-rx.int_lo, cin)
         qx_hi_c = chan(rx.int_hi, cin)
+        if pad:
+            qx_lo_c = np.minimum(qx_lo_c, 0.0)
+            qx_hi_c = np.maximum(qx_hi_c, 0.0)
         sW = np.broadcast_to(rw.scale, W.shape).reshape(cout, -1)[:, 0]
         if depthwise:
             wv = qW.reshape(cout, kh * kw)

@@ -18,6 +18,11 @@ Two phases:
 Safety: a contributor is only erased if *every* downstream boundary it can
 reach is an aggregating target (otherwise its effect would be silently
 dropped); targets containing unsafe contributors are skipped, to fixpoint.
+
+This module holds the *graph-rewrite cores* (in-place, change-reporting);
+the pipeline entry points are the :class:`~repro.core.passes.Transformation`
+classes in ``passes.py``.  The loose functions at the bottom are deprecated
+shims kept for the pre-``SiraModel`` API.
 """
 from __future__ import annotations
 
@@ -45,10 +50,11 @@ ABSORBABLE = {"Mul", "Div", "Add", "Sub"}
 # phase 1: explicitize quantizers
 # --------------------------------------------------------------------------
 
-def explicitize_quantizers(graph: Graph) -> Graph:
-    g = graph.copy()
+def explicitize_quantizers_inplace(g: Graph) -> bool:
+    """Rewrite non-trivial Quant nodes in place; returns True if changed."""
     g.toposort()
     new_nodes: List[Node] = []
+    changed = False
     for node in g.nodes:
         if node.op_type != "Quant":
             new_nodes.append(node)
@@ -62,6 +68,7 @@ def explicitize_quantizers(graph: Graph) -> Graph:
         if trivial:
             new_nodes.append(node)
             continue
+        changed = True
         if g.is_constant(x):
             # weight branch: fold the integer part, keep Mul(s) explicit
             signed = bool(node.attrs.get("signed", 1))
@@ -94,16 +101,17 @@ def explicitize_quantizers(graph: Graph) -> Graph:
             cur = t_subz
         new_nodes.append(Node("Mul", [cur, s_name], [out],
                               name=fresh_name("qscale")))
-    g.nodes = new_nodes
-    g.toposort()
-    return g
+    if changed:
+        g.nodes = new_nodes
+        g.toposort()
+    return changed
 
 
-def duplicate_shared_constants(graph: Graph) -> Graph:
+def duplicate_shared_constants_inplace(g: Graph) -> bool:
     """Give every (node, input-slot) its own private copy of any constant
-    consumed more than once (paper §4.1.2 step 1)."""
-    g = graph.copy()
+    consumed more than once (paper §4.1.2 step 1).  In place."""
     seen: Dict[str, int] = {}
+    changed = False
     for node in g.nodes:
         for i, t in enumerate(node.inputs):
             if not g.is_constant(t):
@@ -114,7 +122,10 @@ def duplicate_shared_constants(graph: Graph) -> Graph:
             new_name = g.add_initializer(g.initializers[t],
                                          name=fresh_name(t + "_dup"))
             node.inputs[i] = new_name
-    return g
+            changed = True
+    if changed:
+        g.touch()
+    return changed
 
 
 # --------------------------------------------------------------------------
@@ -150,7 +161,7 @@ def _reaches_only_targets(g: Graph, const_name: str,
                           targets: Set[str]) -> bool:
     """BFS downstream from the constant; every path must hit a target
     tensor before any non-target boundary (non-linear input or output)."""
-    start_nodes = [n for n in g.nodes if const_name in n.inputs]
+    start_nodes = g.consumers(const_name)
     frontier = [t for n in start_nodes for t in n.outputs]
     visited: Set[str] = set()
     while frontier:
@@ -169,14 +180,13 @@ def _reaches_only_targets(g: Graph, const_name: str,
     return True
 
 
-def aggregate_scales_biases(
-        graph: Graph,
-        input_ranges: Dict[str, ScaledIntRange],
-        explicitize: bool = True) -> AggregationResult:
-    g = explicitize_quantizers(graph) if explicitize else graph.copy()
-    g = duplicate_shared_constants(g)
-    ranges = analyze(g, input_ranges)
-
+def aggregate_with_ranges(g: Graph,
+                          ranges: Dict[str, ScaledIntRange]
+                          ) -> Tuple[AggregationResult, bool]:
+    """Scale/bias aggregation core: mutate ``g`` in place given a range
+    analysis of it (with contribution tracking).  The graph must already be
+    explicitized and have per-consumer private constants (see the in-place
+    helpers above).  Returns (result, changed)."""
     boundaries = _boundary_tensors(g)
     # candidate targets: scaled-int boundary tensors with erasable content
     targets: Dict[str, ScaledIntRange] = {}
@@ -268,10 +278,11 @@ def aggregate_scales_biases(
                 n.inputs[i] = cur
             if is_out:
                 g.outputs = [cur if o == t else o for o in g.outputs]
+            g.touch()
 
-    # erase contributing constants
+    # erase contributing constants (value edits → touch below)
     for c in erase:
-        for n in g.nodes:
+        for n in g.consumers(c):
             for i, ti in enumerate(n.inputs):
                 if ti != c:
                     continue
@@ -280,15 +291,20 @@ def aggregate_scales_biases(
                     raise RuntimeError(
                         f"cannot erase contributor {c} at {n.op_type}")
                 g.initializers[c] = np.full_like(g.initializers[c], v)
+    if erase:
+        g.touch()
 
-    remove_identity_ops(g)
+    changed = bool(targets) or bool(erase)
+    changed |= remove_identity_ops(g)
     g.toposort()
     g.dead_code_eliminate()
-    return AggregationResult(graph=g, targets=targets, erased=erase)
+    return AggregationResult(graph=g, targets=targets, erased=erase), changed
 
 
-def remove_identity_ops(g: Graph) -> None:
-    """Remove Mul(x,1), Div(x,1), Add(x,0), Sub(x,0) (paper step 5)."""
+def remove_identity_ops(g: Graph) -> bool:
+    """Remove Mul(x,1), Div(x,1), Add(x,0), Sub(x,0) (paper step 5).
+    In place; returns True if any node was removed."""
+    any_changed = False
     changed = True
     while changed:
         changed = False
@@ -304,15 +320,49 @@ def remove_identity_ops(g: Graph) -> None:
             if not ident:
                 continue
             src, dst = n.inputs[0], n.outputs[0]
-            for m in g.nodes:
-                m.inputs = [src if t == dst else t for t in m.inputs]
-            g.outputs = [src if o == dst else o for o in g.outputs]
             g.remove_node(n)
-            changed = True
+            g.replace_input(dst, src)
+            changed = any_changed = True
+    return any_changed
+
+
+# --------------------------------------------------------------------------
+# deprecated function-style entry points (pre-SiraModel API)
+# --------------------------------------------------------------------------
+
+def explicitize_quantizers(graph: Graph) -> Graph:
+    """Deprecated shim — prefer ``passes.ExplicitizeQuantizers``."""
+    g = graph.copy()
+    explicitize_quantizers_inplace(g)
+    return g
+
+
+def duplicate_shared_constants(graph: Graph) -> Graph:
+    """Deprecated shim — constant duplication happens inside the
+    ``passes.AggregateScalesBiases`` pass."""
+    g = graph.copy()
+    duplicate_shared_constants_inplace(g)
+    return g
+
+
+def aggregate_scales_biases(
+        graph: Graph,
+        input_ranges: Dict[str, ScaledIntRange],
+        explicitize: bool = True) -> AggregationResult:
+    """Deprecated shim — prefer ``passes.AggregateScalesBiases`` on a
+    ``SiraModel`` (which reuses the model's cached analysis)."""
+    g = graph.copy()
+    if explicitize:
+        explicitize_quantizers_inplace(g)
+    duplicate_shared_constants_inplace(g)
+    ranges = analyze(g, input_ranges)
+    result, _ = aggregate_with_ranges(g, ranges)
+    return result
 
 
 def streamline(graph: Graph, input_ranges: Dict[str, ScaledIntRange]
                ) -> AggregationResult:
     """Full SIRA streamlining: explicitize + aggregate (threshold conversion
-    is a separate, optional pass — see thresholds.py)."""
+    is a separate, optional pass — see thresholds.py).  Deprecated shim —
+    prefer ``passes.Streamline`` / ``flow.build_flow``."""
     return aggregate_scales_biases(graph, input_ranges)

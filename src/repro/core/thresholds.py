@@ -219,12 +219,11 @@ def extract_thresholds(g: Graph, tail: LayerTail,
                          out_bias=out_bias, n_steps=N)
 
 
-def convert_tails_to_thresholds(
-        g: Graph, input_ranges: Dict[str, ScaledIntRange],
-        method: str = "auto") -> Tuple[Graph, List[ThresholdSpec]]:
-    """Replace every convertible layer tail with a MultiThreshold node."""
-    g = g.copy()
-    ranges = analyze(g, input_ranges)
+def convert_tails_with_ranges(
+        g: Graph, ranges: Dict[str, ScaledIntRange],
+        method: str = "auto") -> List[ThresholdSpec]:
+    """Threshold-conversion core: replace every convertible layer tail with
+    a MultiThreshold node, **in place**, given a range analysis of ``g``."""
     tails = find_layer_tails(g, ranges)
     specs: List[ThresholdSpec] = []
     for tail in tails:
@@ -244,4 +243,15 @@ def convert_tails_to_thresholds(
         specs.append(spec)
     g.toposort()
     g.dead_code_eliminate()
+    return specs
+
+
+def convert_tails_to_thresholds(
+        g: Graph, input_ranges: Dict[str, ScaledIntRange],
+        method: str = "auto") -> Tuple[Graph, List[ThresholdSpec]]:
+    """Deprecated shim — prefer ``passes.ConvertTailsToThresholds`` on a
+    ``SiraModel`` (which reuses the model's cached analysis)."""
+    g = g.copy()
+    ranges = analyze(g, input_ranges)
+    specs = convert_tails_with_ranges(g, ranges, method=method)
     return g, specs

@@ -4,6 +4,10 @@ Instrument a graph by executing it over a dataset and tracking elementwise
 min/max of every intermediate tensor; assert containment in the SIRA
 ranges.  Also detects *stuck channels* (point output intervals — the
 generalized dying-ReLU phenomenon of §7.1).
+
+Pipeline form: ``passes.VerifyRanges`` wraps :func:`verify_ranges` as a
+graph-preserving pass that reuses the ``SiraModel`` cached analysis and
+can sample its dataset from the declared input ranges.
 """
 from __future__ import annotations
 

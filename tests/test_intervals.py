@@ -1,6 +1,7 @@
 """Unit + property tests for interval arithmetic primitives."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
 from repro.core.intervals import (ScaledIntRange, add_intervals,

@@ -1,0 +1,341 @@
+"""Tests for the SiraModel + Transformation pass-pipeline API.
+
+Covers: analysis-cache invalidation on graph mutation, pass idempotence and
+the fixpoint combinator, old-shim vs new-pass equivalence, end-to-end
+``build_flow`` numerical equivalence on all four QNN workloads, the unified
+op registry, and the signed-input datatype-bound regression."""
+import numpy as np
+import pytest
+
+from repro.core import (AggregateScalesBiases, BuildConfig,
+                        ConvertTailsToThresholds, ExplicitizeQuantizers,
+                        Fixpoint, Graph, MinimizeAccumulators,
+                        RemoveIdentityOps, ScaledIntRange, SiraModel,
+                        Streamline, VerifyRanges, analysis_calls, analyze,
+                        build_flow, convert_tails_to_thresholds,
+                        datatype_bound_bits, register_op, streamline)
+from repro.core import ops as ops_mod
+from repro.core.workloads import WORKLOADS, make_tfc
+
+
+# --------------------------------------------------------------------------
+# analysis cache
+# --------------------------------------------------------------------------
+
+def test_ranges_cached_until_mutation():
+    model = SiraModel.from_workload(make_tfc())
+    c0 = analysis_calls()
+    r1 = model.ranges
+    r2 = model.ranges
+    assert r1 is r2
+    assert analysis_calls() - c0 == 1
+    assert model.analysis_cached
+
+
+def test_mutation_invalidates_cache():
+    model = SiraModel.from_workload(make_tfc())
+    _ = model.ranges
+    out = model.graph.outputs[0]
+    model.graph.add_node("Relu", [out], ["extra_relu"])
+    model.graph.outputs = ["extra_relu"]
+    assert not model.analysis_cached
+    c0 = analysis_calls()
+    r = model.ranges
+    assert analysis_calls() - c0 == 1
+    assert "extra_relu" in r            # stale ranges were recomputed
+    assert float(np.min(r["extra_relu"].lo)) >= 0.0
+
+
+def test_initializer_value_edit_with_touch_invalidates():
+    model = SiraModel.from_workload(make_tfc())
+    _ = model.ranges
+    name = next(iter(model.graph.initializers))
+    model.graph.initializers[name] = \
+        model.graph.initializers[name] * 2.0
+    model.graph.touch()
+    assert not model.analysis_cached
+
+
+def test_raw_node_list_append_invalidates_cache():
+    """Safety net: mutating graph.nodes directly (bypassing the API)
+    still invalidates via the (version, node count) cache key."""
+    from repro.core.graph import Node
+    model = SiraModel.from_workload(make_tfc())
+    _ = model.ranges
+    out = model.graph.outputs[0]
+    model.graph.nodes.append(Node("Relu", [out], ["raw_y"]))
+    assert not model.analysis_cached
+    assert "raw_y" in model.ranges
+    assert model.graph.producer("raw_y") is not None
+
+
+def test_copy_preserves_cache():
+    model = SiraModel.from_workload(make_tfc())
+    _ = model.ranges
+    c0 = analysis_calls()
+    clone = model.copy()
+    _ = clone.ranges
+    assert analysis_calls() - c0 == 0
+
+
+# --------------------------------------------------------------------------
+# graph index maps
+# --------------------------------------------------------------------------
+
+def test_producer_consumer_index_tracks_mutation():
+    g = Graph(inputs=["X"], outputs=["Y"])
+    w = g.add_initializer(np.eye(2), "W")
+    g.add_node("MatMul", ["X", w], ["mm"])
+    g.add_node("Relu", ["mm"], ["Y"])
+    assert g.producer("mm").op_type == "MatMul"
+    assert [n.op_type for n in g.consumers("mm")] == ["Relu"]
+    relu = g.producer("Y")
+    g.remove_node(relu)
+    assert g.consumers("mm") == []
+    g.add_node("Sigmoid", ["mm"], ["Y"])
+    assert [n.op_type for n in g.consumers("mm")] == ["Sigmoid"]
+
+
+def test_replace_input_rewires_consumers_and_outputs():
+    g = Graph(inputs=["X"], outputs=["Y"])
+    g.add_node("Relu", ["X"], ["Y"])
+    g.add_node("Identity", ["X"], ["Z"])
+    g.replace_input("X", "X2")
+    assert all("X" not in n.inputs for n in g.nodes)
+    assert all("X2" in n.inputs for n in g.nodes)
+
+
+# --------------------------------------------------------------------------
+# passes: idempotence + fixpoint
+# --------------------------------------------------------------------------
+
+def test_explicitize_idempotent():
+    model = SiraModel.from_workload(make_tfc())
+    model, mod1 = ExplicitizeQuantizers().apply(model)
+    model, mod2 = ExplicitizeQuantizers().apply(model)
+    assert mod1 and not mod2
+
+
+def test_remove_identity_ops_idempotent_and_fixpoint():
+    g = Graph(inputs=["X"], outputs=["Y"])
+    one = g.add_initializer(1.0, "one")
+    zero = g.add_initializer(0.0, "zero")
+    g.add_node("Mul", ["X", one], ["a"])
+    g.add_node("Add", ["a", zero], ["Y"])
+    model = SiraModel(g, {"X": ScaledIntRange(lo=np.zeros(()),
+                                              hi=np.ones(()))})
+    tx = Fixpoint(RemoveIdentityOps())
+    model, mod1 = tx.apply(model)
+    assert mod1 and len(model.graph.nodes) == 0
+    model, mod2 = tx.apply(model)
+    assert not mod2
+
+
+def test_fixpoint_raises_when_not_converging():
+    class Always(RemoveIdentityOps):
+        def apply(self, model):
+            return model, True
+
+    model = SiraModel.from_workload(make_tfc())
+    with pytest.raises(RuntimeError, match="fixpoint"):
+        Always().fixpoint(max_iter=3).apply(model)
+
+
+def test_streamline_pass_semantically_stable():
+    """Re-streamlining a streamlined model must preserve semantics."""
+    wl = make_tfc()
+    model = SiraModel.from_workload(wl)
+    m1 = model.transform(Streamline())
+    m2 = m1.transform(Streamline())
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 1, size=wl.input_shape)
+    y0 = wl.graph.execute({"X": x})[wl.graph.outputs[0]]
+    y1 = m1.execute({"X": x})[m1.graph.outputs[0]]
+    y2 = m2.execute({"X": x})[m2.graph.outputs[0]]
+    np.testing.assert_allclose(y0, y1, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(y0, y2, rtol=1e-9, atol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# old shims == new passes
+# --------------------------------------------------------------------------
+
+def test_old_shim_equals_new_pass_path_on_tfc():
+    wl = make_tfc()
+    res = streamline(wl.graph, wl.input_range)
+    g_old, specs_old = convert_tails_to_thresholds(res.graph,
+                                                   wl.input_range)
+
+    model = SiraModel.from_workload(wl).transform(
+        Streamline(), ConvertTailsToThresholds())
+    g_new = model.graph
+
+    assert [n.op_type for n in g_old.nodes] == \
+        [n.op_type for n in g_new.nodes]
+    assert len(specs_old) == len(model.metadata["threshold_specs"])
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        x = rng.uniform(0, 1, size=wl.input_shape)
+        y_old = g_old.execute({"X": x})[g_old.outputs[0]]
+        y_new = g_new.execute({"X": x})[g_new.outputs[0]]
+        np.testing.assert_array_equal(y_old, y_new)
+
+
+# --------------------------------------------------------------------------
+# build_flow (acceptance criterion + all workloads)
+# --------------------------------------------------------------------------
+
+def test_build_flow_single_analysis_for_unmodified_prefix():
+    """After the last graph-mutating step, the whole read-only suffix
+    (accumulator minimization + range verification) shares exactly one
+    full range propagation — O(1) analyses instead of O(N) passes."""
+    result = build_flow(make_tfc())
+    names = [s.name for s in result.steps]
+    assert names == ["ExplicitizeQuantizers", "AggregateScalesBiases",
+                     "ConvertTailsToThresholds", "MinimizeAccumulators",
+                     "VerifyRanges"]
+    last_mutating = max(i for i, s in enumerate(result.steps) if s.modified)
+    suffix = result.steps[last_mutating + 1:]
+    assert len(suffix) >= 2
+    assert sum(s.analysis_calls for s in suffix) == 1
+    # purely structural rewrites never trigger analysis
+    assert result.steps[0].analysis_calls == 0
+    assert result.verification is not None and \
+        result.verification.contained
+    assert len(result.accumulator_reports) >= 1
+
+
+def test_build_flow_matches_old_function_path_numerically():
+    wl = make_tfc()
+    res = streamline(wl.graph, wl.input_range)
+    g_old, _ = convert_tails_to_thresholds(res.graph, wl.input_range)
+    result = build_flow(wl)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 1, size=wl.input_shape)
+    y_old = g_old.execute({"X": x})[g_old.outputs[0]]
+    y_new = result.graph.execute({"X": x})[result.graph.outputs[0]]
+    np.testing.assert_array_equal(y_old, y_new)
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_build_flow_equivalence_all_workloads(name):
+    """End-to-end flow (with per-step equivalence+containment hooks armed)
+    is numerically exact on every paper QNN workload."""
+    wl = WORKLOADS[name]()
+    result = build_flow(wl, verify="full", verify_samples=2)
+    assert len(result.threshold_specs) >= 1
+    lo = float(np.min(wl.input_range["X"].lo))
+    hi = float(np.max(wl.input_range["X"].hi))
+    rng = np.random.default_rng(7)
+    for _ in range(2):
+        x = rng.uniform(lo, hi, size=wl.input_shape)
+        y0 = wl.graph.execute({"X": x})[wl.graph.outputs[0]]
+        y1 = result.graph.execute({"X": x})[result.graph.outputs[0]]
+        np.testing.assert_allclose(y0, y1, rtol=1e-9, atol=1e-9)
+
+
+def test_build_flow_custom_steps_and_callable():
+    seen = []
+
+    def spy(model):
+        seen.append(len(model.graph.nodes))
+        return model, False
+
+    cfg = BuildConfig(steps=["streamline", spy])
+    result = build_flow(make_tfc(), cfg)
+    assert seen and result.steps[-1].name == "spy"
+    assert not result.steps[-1].modified
+
+
+def test_build_flow_rejects_unknown_step():
+    with pytest.raises(KeyError, match="unknown build step"):
+        build_flow(make_tfc(), BuildConfig(steps=["no_such_step"]))
+
+
+def test_build_flow_verify_requires_sample_inputs():
+    """Explicitly requested verification must not be silently skipped when
+    no reference inputs can be drawn (e.g. bare (graph, ranges) input)."""
+    wl = make_tfc()
+    with pytest.raises(ValueError, match="verify"):
+        build_flow((wl.graph, wl.input_range), verify="equivalence")
+
+
+def test_sample_inputs_respects_per_channel_ranges():
+    """Per-channel input ranges must be sampled elementwise, not collapsed
+    to their global hull — otherwise strict VerifyRanges spuriously fails
+    on sound models."""
+    g = Graph(inputs=["X"], outputs=["Y"])
+    g.add_node("Identity", ["X"], ["Y"])
+    lo = np.array([-5.10, -3.80])
+    hi = np.array([5.10, 3.80])
+    model = SiraModel(g, {"X": ScaledIntRange(lo=lo, hi=hi)},
+                      metadata={"input_shape": (16, 2)})
+    for feeds in model.sample_inputs(n=20):
+        x = feeds["X"]
+        assert np.all(x >= lo) and np.all(x <= hi)
+    model, _ = VerifyRanges(samples=20).apply(model)   # must not raise
+
+
+def test_verify_ranges_pass_raises_on_violation():
+    wl = make_tfc()
+    model = SiraModel.from_workload(wl)
+    bad = [{"X": np.full(wl.input_shape, 50.0)}]   # way outside [0, 1]
+    from repro.core import VerificationError
+    with pytest.raises(VerificationError):
+        VerifyRanges(dataset=bad).apply(model)
+
+
+# --------------------------------------------------------------------------
+# unified op registry
+# --------------------------------------------------------------------------
+
+def test_register_custom_op_single_declaration():
+    register_op(
+        "TestDouble",
+        execute=lambda node, x: 2.0 * x,
+        propagate=lambda node, graph, rs: ScaledIntRange(
+            lo=2.0 * rs[0].lo, hi=2.0 * rs[0].hi),
+        cost=dict(alpha=1.0, beta=1.0))
+    try:
+        g = Graph(inputs=["X"], outputs=["Y"])
+        g.add_node("TestDouble", ["X"], ["Y"])
+        y = g.execute({"X": np.asarray([1.0, 2.0])})["Y"]
+        np.testing.assert_array_equal(y, [2.0, 4.0])
+        r = analyze(g, {"X": ScaledIntRange(lo=np.zeros(()),
+                                            hi=np.ones(()))})["Y"]
+        assert float(r.hi) == 2.0
+        from repro.core.costmodel import ELEMENTWISE_COEFFS
+        assert ELEMENTWISE_COEFFS["TestDouble"]["alpha"] == 1.0
+    finally:
+        del ops_mod.OP_REGISTRY["TestDouble"]
+
+
+def test_legacy_registry_views_are_aliased():
+    from repro.core.graph import EXEC_REGISTRY
+    from repro.core.propagate import PROP_REGISTRY
+    assert EXEC_REGISTRY["MatMul"] is ops_mod.OP_REGISTRY["MatMul"].execute
+    assert PROP_REGISTRY["MatMul"] is ops_mod.OP_REGISTRY["MatMul"].propagate
+    # legacy write path registers into the unified record
+    EXEC_REGISTRY["TestWriteThrough"] = lambda node, x: x
+    try:
+        assert ops_mod.OP_REGISTRY["TestWriteThrough"].execute is not None
+    finally:
+        del ops_mod.OP_REGISTRY["TestWriteThrough"]
+
+
+# --------------------------------------------------------------------------
+# accumulator datatype bound (signed-input regression)
+# --------------------------------------------------------------------------
+
+def test_datatype_bound_signed_vs_unsigned():
+    """Colbert et al.: signed N-bit inputs carry N-1 magnitude bits, so the
+    bound must be strictly tighter than for unsigned N-bit inputs (the old
+    code had a dead branch making them equal)."""
+    for k in (16, 128, 1024):
+        for bits in (4, 8):
+            u = datatype_bound_bits(k, bits, 8, input_signed=False)
+            s = datatype_bound_bits(k, bits, 8, input_signed=True)
+            assert s == u - 1, (k, bits, u, s)
+    # spot-check the unsigned formula is unchanged:
+    # alpha = log2(128) + 8 + 8 - 1 = 22, phi ~ 0 → P = 24
+    assert datatype_bound_bits(128, 8, 8) == 24

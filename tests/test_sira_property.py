@@ -7,6 +7,7 @@ change graph semantics.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Graph, ScaledIntRange, analyze,

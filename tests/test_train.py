@@ -151,12 +151,15 @@ def test_compressed_psum_shard_map():
     """compressed_psum inside shard_map ≈ plain psum (int8 wire)."""
     from jax.sharding import PartitionSpec as P
     from repro.train import compressed_psum
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # jax < 0.5
+        from jax.experimental.shard_map import shard_map
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
     mesh = jax.make_mesh((1,), ("pod",))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(8,)),
                     jnp.float32)
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(shard_map(
         lambda v: compressed_psum(v, "pod"), mesh=mesh,
         in_specs=P(), out_specs=P()))(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x),
