@@ -1,0 +1,91 @@
+"""Interpreter vs compiled-backend throughput on the four QNN workloads.
+
+For each workload: run the optimized graph through the per-node numpy
+interpreter (``Graph.execute``) and through the compiled backend
+(``SiraModel.compile()`` — jitted JAX routed through the kernel wrappers;
+jnp reference path on CPU, Pallas on TPU), on the same batched inputs,
+and record per-sample latency + speedup.
+
+    PYTHONPATH=src python benchmarks/bench_backend.py \
+        [--batch 64] [--repeat 5] [--quick] [--out BENCH_backend.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _time(fn, repeat: int) -> float:
+    fn()                                 # warmup (trace/compile)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_workload(name: str, batch: int, repeat: int) -> dict:
+    from repro.core import build_flow
+    from repro.core.workloads import WORKLOADS
+
+    model = build_flow(WORKLOADS[name]()).model
+    (inp,) = model.graph.inputs
+    shape = (batch,) + tuple(model.metadata["input_shape"][1:])
+    r = model.input_ranges[inp]
+    rng = np.random.default_rng(0)
+    lo = np.broadcast_to(np.asarray(r.lo, np.float64), shape)
+    hi = np.broadcast_to(np.asarray(r.hi, np.float64), shape)
+    x = rng.uniform(lo, hi, size=shape)
+    feeds = {inp: x}
+
+    interp_s = _time(lambda: model.execute(feeds), repeat)
+    compiled = model.compile()
+    compiled_s = _time(lambda: compiled(feeds), repeat)
+
+    return dict(
+        workload=name,
+        batch=batch,
+        nodes=len(model.graph.nodes),
+        plan=compiled.kernel_calls,
+        interpreter_us_per_sample=interp_s / batch * 1e6,
+        compiled_us_per_sample=compiled_s / batch * 1e6,
+        speedup=interp_s / compiled_s,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument("--quick", action="store_true",
+                    help="small batch / single repeat (CI smoke)")
+    ap.add_argument("--out", default="BENCH_backend.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.batch, args.repeat = 8, 2
+
+    from repro.core.workloads import WORKLOADS
+
+    results = []
+    for name in WORKLOADS:
+        row = bench_workload(name, args.batch, args.repeat)
+        results.append(row)
+        print(f"{name:10s} batch={row['batch']:3d} "
+              f"interp={row['interpreter_us_per_sample']:9.1f} us/sample "
+              f"compiled={row['compiled_us_per_sample']:9.1f} us/sample "
+              f"speedup={row['speedup']:6.1f}x", flush=True)
+    import jax
+    payload = dict(backend=jax.default_backend(),
+                   batch=args.batch, repeat=args.repeat,
+                   results=results)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,17 @@ def main() -> None:
     assert np.allclose(y0, y2), "pipeline must be exact"
     print("equivalence: original == streamlined+thresholded (exact)")
 
+    # 6) compiled backend: one jitted JAX callable routed through the
+    #    Pallas kernels (int_matmul with the SIRA accumulator width,
+    #    fused multithreshold/quantize), batched
+    compiled = result.model.compile()
+    xb = np.abs(rng.uniform(0, 1, size=(32,) + wl.input_shape[1:]))
+    yc = compiled({"X": xb})[result.graph.outputs[0]]
+    yi = result.graph.execute({"X": xb})[result.graph.outputs[0]]
+    assert np.allclose(yc, yi, rtol=1e-5, atol=1e-5)
+    print(f"compiled backend: {compiled.kernel_calls} — matches the "
+          f"interpreter on a batch of {xb.shape[0]}")
+
 
 if __name__ == "__main__":
     main()

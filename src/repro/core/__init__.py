@@ -32,6 +32,8 @@ from .passes import (Transformation, Fixpoint, Sequence,   # noqa: F401
                      RemoveIdentityOps, Streamline,
                      ConvertTailsToThresholds, MinimizeAccumulators,
                      VerifyRanges, VerificationError)
+from .lower import (lower, CompiledSiraModel, CompileBackend,  # noqa: F401
+                    LoweringError)
 from .flow import (BuildConfig, BuildResult, StepReport,   # noqa: F401
                    build_flow, register_step, STEP_REGISTRY,
                    DEFAULT_STEPS)

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from . import propagate as _prop
+from .lower import CompileBackend
 from .model import SiraModel
 from .passes import (AggregateScalesBiases, ConvertTailsToThresholds,
                      ExplicitizeQuantizers, MinimizeAccumulators,
@@ -128,6 +129,13 @@ register_step("minimize_accumulators")(
 register_step("verify_ranges")(
     lambda cfg: VerifyRanges(samples=cfg.verify_samples, seed=cfg.seed,
                              strict=cfg.strict_verify))
+# lower to the compiled Pallas-kernel backend (result under
+# metadata['compiled']); optional — append to cfg.steps to enable, e.g.
+#   build_flow(wl, steps=list(DEFAULT_STEPS) + ["step_compile"])
+register_step("step_compile")(
+    lambda cfg: CompileBackend())
+register_step("compile")(
+    lambda cfg: CompileBackend())
 
 
 def resolve_step(step: Step, cfg: BuildConfig) -> Transformation:

@@ -258,10 +258,11 @@ def _exec_quant(node, x, scale, zero_point, bitwidth):
 @executor("MultiThreshold")
 def _exec_multithreshold(node, x, thresholds, *rest):
     """x: (..., C) if axis=-1 (MatMul style) or (N, C, ...) if axis=1.
-    thresholds: (C, N) ascending. out = bias + scale * sum_i(x >= thr_i)."""
+    thresholds: (C, N) ascending. out = bias + scale * sum_i(x >= thr_i).
+    out_scale/out_bias: scalar, or (C,) per-channel arrays."""
     axis = int(node.attrs.get("axis", -1))
-    out_scale = float(node.attrs.get("out_scale", 1.0))
-    out_bias = float(node.attrs.get("out_bias", 0.0))
+    out_scale = np.asarray(node.attrs.get("out_scale", 1.0), dtype=np.float64)
+    out_bias = np.asarray(node.attrs.get("out_bias", 0.0), dtype=np.float64)
     C, N = thresholds.shape
     xm = np.moveaxis(x, axis, -1)  # (..., C)
     cnt = (xm[..., :, None] >= thresholds).sum(axis=-1)  # (..., C)

@@ -115,6 +115,13 @@ class SiraModel:
         for _ in range(n):
             yield {inp: rng.uniform(lo, hi, size=shape)}
 
+    def compile(self, **kwargs) -> "Any":
+        """Lower this (optimized) model to a single jitted JAX callable
+        backed by the Pallas kernels — see :func:`repro.core.lower.lower`
+        for the options.  Returns a :class:`CompiledSiraModel`."""
+        from .lower import lower as _lower
+        return _lower(self, **kwargs)
+
     # ----------------------------------------------------------- transforms
     def transform(self, *transformations, copy: bool = True) -> "SiraModel":
         """Apply transformations in sequence (each once; wrap one in

@@ -139,8 +139,14 @@ def _prop_multithreshold(node: Node, graph: Graph, rs: List[ScaledIntRange]):
     rx, rthr = rs
     thr = _const_val(rthr)  # (C, N)
     axis = int(node.attrs.get("axis", -1))
-    out_scale = float(node.attrs.get("out_scale", 1.0))
-    out_bias = float(node.attrs.get("out_bias", 0.0))
+    # scalar attrs stay 0-d (downstream consumers call float(r.scale));
+    # per-channel arrays become (C,)
+    out_scale = np.asarray(node.attrs.get("out_scale", 1.0), np.float64)
+    out_bias = np.asarray(node.attrs.get("out_bias", 0.0), np.float64)
+    out_scale = out_scale.reshape(()) if out_scale.size == 1 \
+        else out_scale.reshape(-1)
+    out_bias = out_bias.reshape(()) if out_bias.size == 1 \
+        else out_bias.reshape(-1)
     C, N = thr.shape
     # reduce range to per-channel: take channel-hull of lo/hi
     lo_c = np.full((C,), float(np.min(rx.lo)))

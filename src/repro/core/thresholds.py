@@ -137,8 +137,8 @@ def _eval_tail(sub: Graph, xs: np.ndarray, C: int, axis: int) -> np.ndarray:
 @dataclasses.dataclass
 class ThresholdSpec:
     thresholds: np.ndarray     # (C, N) ascending
-    out_scale: float
-    out_bias: float
+    out_scale: "float | np.ndarray"   # scalar, or (C,) per-channel
+    out_bias: "float | np.ndarray"
     n_steps: int
 
 
@@ -153,18 +153,29 @@ def extract_thresholds(g: Graph, tail: LayerTail,
     signed = bool(qn.attrs.get("signed", 1))
     narrow = bool(qn.attrs.get("narrow", 0))
     qmin, qmax = quant_bounds(bits, signed, narrow)
-    s_q = float(np.asarray(g.initializers[qn.inputs[1]]).reshape(-1)[0])
-    z_q = float(np.asarray(g.initializers[qn.inputs[2]]).reshape(-1)[0])
     N = int(qmax - qmin)
 
     sub = _tail_subgraph(g, tail)
     C = _tail_params_channels(g, tail)
 
+    # Per-channel quantizer parameters: (C,) arrays broadcast over the
+    # per-channel tail evaluation below.  A granularity that matches
+    # neither per-tensor nor the tail's channel count cannot be expressed
+    # as one threshold row per channel — reject instead of miscompiling
+    # (the old code silently collapsed the arrays to element 0).
+    s_q = np.asarray(g.initializers[qn.inputs[1]], dtype=np.float64).reshape(-1)
+    z_q = np.asarray(g.initializers[qn.inputs[2]], dtype=np.float64).reshape(-1)
+    for name, arr in (("scale", s_q), ("zero_point", z_q)):
+        if arr.size not in (1, C):
+            raise ValueError(
+                f"quantizer {name} granularity {arr.size} does not match "
+                f"tail channels {C} — cannot threshold")
+
     def f_int(xs: np.ndarray) -> np.ndarray:
         """Integer output level (count + qmin) for integer inputs."""
         y = _eval_tail(sub, xs.astype(np.float64), C, tail.channel_axis)
-        lev = np.round(y / s_q + z_q)
-        return lev
+        lev = np.round(y / s_q + z_q)       # (R, C) / (C,) broadcast
+        return np.clip(lev, qmin, qmax)     # the quantizer saturates
 
     if method == "auto":
         method = "edge" if (hi - lo) <= EDGE_DETECT_MAX_RANGE else "bisect"
@@ -213,8 +224,9 @@ def extract_thresholds(g: Graph, tail: LayerTail,
                     thr[c, j] = float(b)
     # thresholds must be ascending per channel
     thr = np.sort(thr, axis=1)
-    out_scale = s_q
-    out_bias = s_q * (qmin - z_q)
+    out_scale = s_q if s_q.size > 1 else float(s_q[0])
+    ob = np.asarray(s_q * (qmin - z_q), dtype=np.float64).reshape(-1)
+    out_bias = ob if ob.size > 1 else float(ob[0])
     return ThresholdSpec(thresholds=thr, out_scale=out_scale,
                          out_bias=out_bias, n_steps=N)
 

@@ -27,6 +27,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def infer_out_dtype(n_thresholds: int, out_bias: int):
+    """Smallest signed dtype that holds every possible output level.
+
+    The count runs over [0, N], so the output range is
+    [out_bias, out_bias + N].  A fixed int8 default silently wraps for
+    8-bit unsigned tails (out_bias=0, N=255 → count 255 → -1), so the
+    dtype must be derived from the actual range (or passed explicitly).
+    """
+    lo, hi = int(out_bias), int(out_bias) + int(n_thresholds)
+    for dt, dmin, dmax in ((jnp.int8, -128, 127), (jnp.int16, -2**15, 2**15 - 1)):
+        if dmin <= lo and hi <= dmax:
+            return dt
+    return jnp.int32
+
+
 def _mt_kernel(x_ref, thr_ref, o_ref, *, n_thresholds: int, out_bias: int,
                out_dtype):
     x = x_ref[...]                       # (bm, bc) int32
@@ -43,16 +58,19 @@ def _mt_kernel(x_ref, thr_ref, o_ref, *, n_thresholds: int, out_bias: int,
 @functools.partial(jax.jit, static_argnames=("bm", "bc", "out_bias",
                                              "out_dtype", "interpret"))
 def multithreshold(x: jnp.ndarray, thresholds: jnp.ndarray,
-                   *, out_bias: int = 0, out_dtype=jnp.int8,
+                   *, out_bias: int = 0, out_dtype=None,
                    bm: int = 256, bc: int = 128,
                    interpret: bool = False) -> jnp.ndarray:
     """x (M, C) integer accumulators; thresholds (N, C) ascending per column.
 
-    Returns out (M, C): out_bias + #{i : x >= T[i, c]} as out_dtype.
+    Returns out (M, C): out_bias + #{i : x >= T[i, c]} as out_dtype
+    (default: derived from the [out_bias, out_bias + N] output range).
     """
     M, C = x.shape
     N, C2 = thresholds.shape
     assert C == C2
+    if out_dtype is None:
+        out_dtype = infer_out_dtype(N, out_bias)
     bm, bc = min(bm, M), min(bc, C)
     assert M % bm == 0 and C % bc == 0, \
         f"shape ({M},{C}) not divisible by block ({bm},{bc})"

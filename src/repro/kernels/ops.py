@@ -4,16 +4,25 @@ On TPU the Pallas path is used; elsewhere (this CPU container) the wrappers
 fall back to the jnp reference implementations, and the Pallas kernels are
 validated in interpret mode by the test suite.  ``use_pallas`` can be
 forced for interpret-mode execution.
+
+The raw kernels hard-assert block divisibility (MXU/VPU tiles); these
+wrappers make them total over real workload shapes (10-class heads,
+3-channel inputs, odd batch sizes) by padding every blocked axis up to a
+block multiple and slicing the result back.  Padding values are chosen so
+the visible region is unaffected: zeros along contraction axes (contribute
+nothing to the dot product), ones for padded scales (no 0/0), and padded
+rows/columns are discarded by the final slice.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .int_matmul import int_matmul as _int_matmul_pallas
+from .multithreshold import infer_out_dtype  # noqa: F401  (re-exported)
 from .multithreshold import multithreshold as _multithreshold_pallas
 from .quantize import quantize as _quantize_pallas
 
@@ -22,43 +31,119 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _sublane(dtype) -> int:
+    """Minimum second-to-last-dim tile for a dtype ((8,128) f32/i32,
+    (16,128) bf16, (32,128) int8)."""
+    size = jnp.dtype(dtype).itemsize
+    return {1: 32, 2: 16}.get(size, 8)
+
+
+def _block(dim: int, requested: int, base: int) -> int:
+    """Shrink a requested block to the dimension (rounded up to the tile
+    base) so small shapes get one padded block instead of a huge grid."""
+    return min(requested, _round_up(max(dim, 1), base))
+
+
+def _pad2d(x: jnp.ndarray, rows: int, cols: int, value=0) -> jnp.ndarray:
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)),
+                   constant_values=value)
+
+
+def _pad1d(x: jnp.ndarray, n: int, value=0) -> jnp.ndarray:
+    if x.shape[0] == n:
+        return x
+    return jnp.pad(x, (0, n - x.shape[0]), constant_values=value)
+
+
+def _padded_blocks(dim: int, requested: int, base: int) -> Tuple[int, int]:
+    b = _block(dim, requested, base)
+    return b, _round_up(dim, b)
+
+
 def int_matmul(x, w, scale=None, bias=None, *, acc_bits: int = 32,
-               out_dtype=None, use_pallas: Optional[bool] = None,
+               out_dtype=None, bm: int = 128, bn: int = 128, bk: int = 128,
+               use_pallas: Optional[bool] = None,
                interpret: Optional[bool] = None):
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return _int_matmul_pallas(
-            x, w, scale, bias, acc_bits=acc_bits, out_dtype=out_dtype,
+        M, K = x.shape
+        _, N = w.shape
+        bm, Mp = _padded_blocks(M, bm, _sublane(x.dtype))
+        bk, Kp = _padded_blocks(K, bk, 128)
+        bn, Np = _padded_blocks(N, bn, 128)
+        xp = _pad2d(x, Mp, Kp)                   # zero K-pad: adds nothing
+        wp = _pad2d(w, Kp, Np)
+        # broadcast per-tensor (size-1) scale/bias to all N columns before
+        # padding — padding a scalar with ones would scale only column 0
+        sp = None if scale is None else _pad1d(
+            jnp.broadcast_to(jnp.asarray(scale).reshape(-1), (N,)), Np, 1)
+        bp = None if bias is None else _pad1d(
+            jnp.broadcast_to(jnp.asarray(bias).reshape(-1), (N,)), Np, 0)
+        out = _int_matmul_pallas(
+            xp, wp, sp, bp, bm=bm, bn=bn, bk=bk, acc_bits=acc_bits,
+            out_dtype=out_dtype,
             interpret=bool(interpret if interpret is not None
                            else not _on_tpu()))
+        return out[:M, :N]
     return ref.int_matmul_ref(x, w, scale, bias, acc_bits=acc_bits,
                               out_dtype=out_dtype)
 
 
-def multithreshold(x, thresholds, *, out_bias: int = 0, out_dtype=jnp.int8,
+def multithreshold(x, thresholds, *, out_bias: int = 0, out_dtype=None,
+                   bm: int = 256, bc: int = 128,
                    use_pallas: Optional[bool] = None,
                    interpret: Optional[bool] = None):
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return _multithreshold_pallas(
-            x, thresholds, out_bias=out_bias, out_dtype=out_dtype,
+        M, C = x.shape
+        N = thresholds.shape[0]
+        bm, Mp = _padded_blocks(M, bm, _sublane(x.dtype))
+        bc, Cp = _padded_blocks(C, bc, 128)
+        xp = _pad2d(x, Mp, Cp)
+        tp = _pad2d(thresholds, N, Cp)           # padded columns sliced off
+        out = _multithreshold_pallas(
+            xp, tp, out_bias=out_bias,
+            out_dtype=out_dtype if out_dtype is not None
+            else infer_out_dtype(N, out_bias),
+            bm=bm, bc=bc,
             interpret=bool(interpret if interpret is not None
                            else not _on_tpu()))
+        return out[:M, :C]
     return ref.multithreshold_ref(x, thresholds, out_bias=out_bias,
                                   out_dtype=out_dtype)
 
 
 def quantize(x, scale, zero_point, *, qmin: int = -128, qmax: int = 127,
-             out_dtype=jnp.int8, use_pallas: Optional[bool] = None,
+             out_dtype=jnp.int8, bm: int = 256, bc: int = 128,
+             use_pallas: Optional[bool] = None,
              interpret: Optional[bool] = None):
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return _quantize_pallas(
-            x, scale, zero_point, qmin=qmin, qmax=qmax, out_dtype=out_dtype,
+        M, C = x.shape
+        scale = jnp.broadcast_to(jnp.asarray(scale).reshape(1, -1),
+                                 (1, C)).reshape(-1)
+        zero_point = jnp.broadcast_to(jnp.asarray(zero_point).reshape(1, -1),
+                                      (1, C)).reshape(-1)
+        bm, Mp = _padded_blocks(M, bm, _sublane(x.dtype))
+        bc, Cp = _padded_blocks(C, bc, 128)
+        xp = _pad2d(x, Mp, Cp)
+        sp = _pad1d(scale, Cp, 1)                # ones: no 0/0 in the pad
+        zp = _pad1d(zero_point, Cp, 0)
+        out = _quantize_pallas(
+            xp, sp, zp, qmin=qmin, qmax=qmax, out_dtype=out_dtype,
+            bm=bm, bc=bc,
             interpret=bool(interpret if interpret is not None
                            else not _on_tpu()))
+        return out[:M, :C]
     return ref.quantize_ref(x, scale, zero_point, qmin=qmin, qmax=qmax,
                             out_dtype=out_dtype)

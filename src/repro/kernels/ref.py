@@ -24,17 +24,26 @@ def int_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
 
 
 def multithreshold_ref(x: jnp.ndarray, thresholds: jnp.ndarray,
-                       out_bias: int = 0, out_dtype=jnp.int8) -> jnp.ndarray:
-    """x (M, C); thresholds (N, C). out = out_bias + sum_i(x >= T_i)."""
+                       out_bias: int = 0, out_dtype=None) -> jnp.ndarray:
+    """x (M, C); thresholds (N, C). out = out_bias + sum_i(x >= T_i).
+
+    out_dtype defaults to the smallest dtype holding [out_bias,
+    out_bias + N] (see ``multithreshold.infer_out_dtype``)."""
+    from .multithreshold import infer_out_dtype
+    if out_dtype is None:
+        out_dtype = infer_out_dtype(thresholds.shape[0], out_bias)
     cnt = (x[:, None, :] >= thresholds[None, :, :]).sum(axis=1)
     return (cnt + out_bias).astype(out_dtype)
 
 
 def multithreshold_searchsorted_ref(x: jnp.ndarray, thresholds: jnp.ndarray,
                                     out_bias: int = 0,
-                                    out_dtype=jnp.int8) -> jnp.ndarray:
+                                    out_dtype=None) -> jnp.ndarray:
     """Bisection formulation (the paper's Fig 17 search tree, as a jnp
     vectorized searchsorted) — same function, O(log N) comparisons."""
+    from .multithreshold import infer_out_dtype
+    if out_dtype is None:
+        out_dtype = infer_out_dtype(thresholds.shape[0], out_bias)
     def per_channel(xc, tc):
         return jnp.searchsorted(tc, xc, side="right")
     cnt = jax.vmap(per_channel, in_axes=(1, 1), out_axes=1)(x, thresholds)

@@ -139,16 +139,28 @@ def attention_prefill(params, x, *, n_heads, n_kv, hd, theta,
 def attention_decode(params, x, cache: Dict[str, jnp.ndarray],
                      cache_index: jnp.ndarray, *, n_heads, n_kv, hd, theta,
                      qkv_bias=False, logit_cap=0.0, window=0, quant=None,
-                     rolling: bool = False
+                     rolling: bool = False, valid_from=None
                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Single-token decode against a (B, S_max, KV, hd) cache.
 
     rolling=True treats the cache as a circular buffer of length S_max
     (sliding-window local attention): writes go to ``index mod S_max``;
-    once the buffer has wrapped, every slot is a valid in-window key."""
+    once the buffer has wrapped, every slot is a valid in-window key.
+
+    valid_from (B,) marks each row's first valid cache slot: left-padded
+    prompts occupy slots [valid_from[b], cache_index]; earlier slots hold
+    pad garbage and are masked out of the attention, and RoPE positions
+    are shifted per row so slot valid_from[b] is position 0 — making each
+    batch row's math identical to serving that request alone.  Not
+    supported for rolling (sliding-window) caches."""
     B, S1, _ = x.shape  # S1 == 1
     S_max = cache["k"].shape[1]
-    positions = jnp.broadcast_to(cache_index[None, None], (B, S1))
+    if valid_from is not None and rolling:
+        raise NotImplementedError("valid_from with a rolling cache")
+    if valid_from is None:
+        positions = jnp.broadcast_to(cache_index[None, None], (B, S1))
+    else:
+        positions = jnp.maximum(cache_index - valid_from, 0)[:, None]
     q, k, v = _qkv(params, x, n_heads, n_kv, hd, positions, theta, quant)
     slot = jnp.mod(cache_index, S_max) if rolling else cache_index
     int_cache = cache["k"].dtype == jnp.int8
@@ -177,7 +189,11 @@ def attention_decode(params, x, cache: Dict[str, jnp.ndarray],
         mask = mask | (cache_index >= S_max)
     if window:
         mask &= k_pos > cache_index - window
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    if valid_from is not None:
+        mask = mask[None, :] & (k_pos[None, :] >= valid_from[:, None])
+        s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    else:
+        s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqkgs,bskh->bqkgh", p,
                      v_cache.astype(jnp.float32) * kv_deq)

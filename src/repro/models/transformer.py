@@ -97,12 +97,12 @@ def _dense_layer_fwd(p, x, cfg: ArchConfig, *, window: int, quant=None):
 
 
 def _dense_layer_dec(p, x, cache, idx, cfg: ArchConfig, *, window: int,
-                     quant=None, rolling: bool = False):
+                     quant=None, rolling: bool = False, valid_from=None):
     h, cache = attention_decode(
         p["attn"], rms_norm(x, p["ln1"]), cache, idx, n_heads=cfg.n_heads,
         n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta,
         logit_cap=cfg.attn_softcap, window=window, quant=quant,
-        rolling=rolling)
+        rolling=rolling, valid_from=valid_from)
     if cfg.post_norms:
         h = rms_norm(h, p["post_ln1"])
     x = x + h
@@ -125,10 +125,12 @@ def _moe_layer_fwd(p, x, cfg: ArchConfig, *, quant=None):
     return x + h, aux
 
 
-def _moe_layer_dec(p, x, cache, idx, cfg: ArchConfig, *, quant=None):
+def _moe_layer_dec(p, x, cache, idx, cfg: ArchConfig, *, quant=None,
+                   valid_from=None):
     h, cache = attention_decode(
         p["attn"], rms_norm(x, p["ln1"]), cache, idx, n_heads=cfg.n_heads,
-        n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta, quant=quant)
+        n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta, quant=quant,
+        valid_from=valid_from)
     x = x + h
     h, _ = apply_moe(p["moe"], rms_norm(x, p["ln2"]), top_k=cfg.moe.top_k,
                      capacity_factor=cfg.moe.capacity_factor,
@@ -308,8 +310,15 @@ class Model:
 
     # ------------------------------------------------------ decode step
     def decode_step(self, params, tokens, cache, cache_index, *,
-                    quant=None) -> Tuple[jnp.ndarray, Any]:
-        """tokens (B, 1) → (logits (B, 1, V), new cache)."""
+                    quant=None, valid_from=None) -> Tuple[jnp.ndarray, Any]:
+        """tokens (B, 1) → (logits (B, 1, V), new cache).
+
+        valid_from (B,): first valid cache slot per batch row for
+        left-padded batches — pad slots are masked out of attention and
+        RoPE positions shifted per row (see ``attention_decode``).  Only
+        supported for full-context attention: SSM/hybrid state updates
+        cannot be masked this way (ignored), and sliding-window rolling
+        caches raise ``NotImplementedError``."""
         cfg = self.cfg
         x = self._embed(params, tokens, None)
 
@@ -320,21 +329,26 @@ class Model:
                     # local cache is a rolling window buffer: the buffer
                     # length == window enforces locality; rope positions
                     # were applied at write time so slots stay valid.
+                    # valid_from is forwarded so attention_decode raises
+                    # rather than silently serving the local layers
+                    # unmasked (rolling buffers cannot mask pad slots).
                     x, cl = _dense_layer_dec(
                         p["local"], x, c["local"], cache_index, cfg,
-                        window=0, quant=quant, rolling=True)
+                        window=0, quant=quant, rolling=True,
+                        valid_from=valid_from)
                     x, cg = _dense_layer_dec(
                         p["global"], x, c["global"], cache_index, cfg,
-                        window=0, quant=quant)
+                        window=0, quant=quant, valid_from=valid_from)
                     return x, {"local": cl, "global": cg}
                 return _dense_layer_dec(p, x, c, cache_index, cfg,
-                                        window=0, quant=quant)
+                                        window=0, quant=quant,
+                                        valid_from=valid_from)
             x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
         elif cfg.family == "moe":
             def body_m(x, pc):
                 p, c = pc
                 return _moe_layer_dec(p, x, c, cache_index, cfg,
-                                      quant=quant)
+                                      quant=quant, valid_from=valid_from)
             x, new_cache = jax.lax.scan(body_m, x,
                                         (params["layers"], cache))
         elif cfg.family == "ssm":
@@ -359,7 +373,7 @@ class Model:
                 x, cm_new = jax.lax.scan(inner, x, (pg, cm))
                 x, ckv_new = _dense_layer_dec(
                     params["shared_attn"], x, ckv, cache_index, cfg,
-                    window=0, quant=quant)
+                    window=0, quant=quant, valid_from=valid_from)
                 return x, (cm_new, ckv_new)
             x, (cm, ckv) = jax.lax.scan(
                 body_h, x, (params["layers"], cache["mamba"],

@@ -39,35 +39,47 @@ class ServingEngine:
         self.rng = jax.random.PRNGKey(seed)
 
         self._decode = jax.jit(
-            lambda p, t, c, i: model.decode_step(p, t, c, i,
-                                                 quant=quant))
-
-    def _prefill_into_cache(self, cache, slot, tokens: np.ndarray):
-        """Sequentially decode the prompt into one slot's cache (simple,
-        correct; a production path would batch prefill)."""
-        logits = None
-        for t, tok in enumerate(tokens):
-            tok_b = jnp.full((self.B, 1), 0, jnp.int32).at[slot, 0].set(
-                int(tok))
-            logits, cache = self._decode(self.params, tok_b, cache,
-                                         jnp.asarray(t, jnp.int32))
-        return logits, cache
+            lambda p, t, c, i, v: model.decode_step(p, t, c, i,
+                                                    quant=quant,
+                                                    valid_from=v))
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
-        """Serve a batch of ≤ batch_slots requests to completion."""
+        """Serve a batch of ≤ batch_slots requests to completion.
+
+        Prompts are left-padded to a common length so every request's
+        last prompt token lands on the same decode step.  The pad slots
+        do get decoded into the KV cache, but ``valid_from`` masks them
+        out of every attention read and shifts RoPE positions per slot,
+        so each row computes exactly what it would when served alone.
+        Mixed-length batches are rejected for model families where pad
+        tokens cannot be masked retroactively (SSM/hybrid state updates,
+        sliding-window rolling caches)."""
         assert len(requests) <= self.B
         outs: List[List[int]] = [[] for _ in requests]
-        # same-length batched fast path
-        cache = self.model.init_cache(self.B, self.S)
         L = max(len(r.prompt) for r in requests)
+        needs_mask = any(len(r.prompt) != L for r in requests)
+        cfg = self.model.cfg
+        if needs_mask and (cfg.sliding_window or
+                           cfg.family in ("ssm", "hybrid")):
+            # rolling local caches and SSM state updates cannot mask pad
+            # tokens out retroactively — refuse rather than silently
+            # serve corrupted shorter prompts
+            raise NotImplementedError(
+                f"mixed-length batches are not supported for "
+                f"family={cfg.family!r} sliding_window={cfg.sliding_window}"
+                f" — pad-token masking only covers full-context attention")
+        cache = self.model.init_cache(self.B, self.S)
         toks = np.zeros((self.B, L), np.int32)
+        valid = np.zeros((self.B,), np.int32)
         for i, r in enumerate(requests):
             toks[i, L - len(r.prompt):] = r.prompt   # left-pad
+            valid[i] = L - len(r.prompt)             # first real slot
+        valid_from = jnp.asarray(valid) if needs_mask else None
         logits = None
         for t in range(L):
             logits, cache = self._decode(
                 self.params, jnp.asarray(toks[:, t:t + 1]), cache,
-                jnp.asarray(t, jnp.int32))
+                jnp.asarray(t, jnp.int32), valid_from)
         max_new = max(r.max_new_tokens for r in requests)
         cur = self._sample(logits, requests)
         for i, r in enumerate(requests):
@@ -75,7 +87,7 @@ class ServingEngine:
         for step in range(1, max_new):
             logits, cache = self._decode(
                 self.params, jnp.asarray(cur).reshape(self.B, 1), cache,
-                jnp.asarray(L + step - 1, jnp.int32))
+                jnp.asarray(L + step - 1, jnp.int32), valid_from)
             cur = self._sample(logits, requests)
             for i, r in enumerate(requests):
                 if step < r.max_new_tokens:

@@ -1,12 +1,15 @@
 """Pallas kernel sweeps: interpret-mode kernels vs pure-jnp oracles across
-shapes, dtypes, block sizes, and accumulator widths."""
+shapes, dtypes, block sizes, and accumulator widths — including the padded
+``kernels.ops`` wrappers on real-workload odd shapes (10-class heads,
+3-channel inputs, odd batches) that violate the raw kernels' block
+divisibility asserts."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.int_matmul import int_matmul
-from repro.kernels.multithreshold import multithreshold
+from repro.kernels.multithreshold import infer_out_dtype, multithreshold
 from repro.kernels.quantize import quantize
 
 
@@ -144,6 +147,98 @@ def test_kernel_pipeline_matches_streamlined_graph():
                          out_dtype=jnp.int32, interpret=True)
     got = np.asarray(cnt, np.float64) * 0.5           # final Mul(qs_Y)
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# padded wrappers: odd (non-block-divisible) shapes through the Pallas path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(1, 49, 10), (7, 3, 5), (130, 200, 10),
+                                   (8, 64, 100)])
+def test_int_matmul_odd_shapes_padded(m, k, n):
+    rng = np.random.default_rng(m * k + n)
+    x = rng.integers(-128, 128, size=(m, k)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(k, n)).astype(np.int8)
+    got = ops.int_matmul(jnp.asarray(x), jnp.asarray(w),
+                         use_pallas=True, interpret=True)
+    want = ref.int_matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int_matmul_odd_shapes_fused_dequant():
+    rng = np.random.default_rng(5)
+    x = rng.integers(-8, 8, size=(6, 49)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(49, 10)).astype(np.int8)
+    s = rng.uniform(0.01, 0.1, size=(10,)).astype(np.float32)
+    b = rng.normal(size=(10,)).astype(np.float32)
+    got = ops.int_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s),
+                         jnp.asarray(b), use_pallas=True, interpret=True)
+    want = ref.int_matmul_ref(jnp.asarray(x), jnp.asarray(w),
+                              jnp.asarray(s), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int_matmul_scalar_scale_broadcasts_to_all_columns():
+    """Per-tensor (size-1) scale must apply to every output column — the
+    padded wrapper used to pad a scalar with ones, scaling only col 0."""
+    x = jnp.ones((4, 8), jnp.int8)
+    w = jnp.ones((8, 10), jnp.int8)
+    s = jnp.asarray([0.5], jnp.float32)
+    got = np.asarray(ops.int_matmul(x, w, s, use_pallas=True,
+                                    interpret=True))
+    np.testing.assert_array_equal(got, np.full((4, 10), 4.0, np.float32))
+
+
+@pytest.mark.parametrize("m,c,n_thr", [(5, 3, 3), (1, 10, 15), (33, 130, 7)])
+def test_multithreshold_odd_shapes_padded(m, c, n_thr):
+    rng = np.random.default_rng(m + c + n_thr)
+    x = rng.integers(-500, 500, size=(m, c)).astype(np.int32)
+    thr = np.sort(rng.integers(-400, 400, size=(n_thr, c)), axis=0
+                  ).astype(np.int32)
+    got = ops.multithreshold(jnp.asarray(x), jnp.asarray(thr), out_bias=-1,
+                             out_dtype=jnp.int32, use_pallas=True,
+                             interpret=True)
+    want = ref.multithreshold_ref(jnp.asarray(x), jnp.asarray(thr),
+                                  out_bias=-1, out_dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,c", [(3, 10), (1, 1), (257, 5)])
+def test_quantize_odd_shapes_padded(m, c):
+    rng = np.random.default_rng(m + c)
+    x = rng.normal(size=(m, c)).astype(np.float32) * 3
+    s = rng.uniform(0.01, 0.3, size=(c,)).astype(np.float32)
+    z = np.zeros((c,), np.float32)
+    got = ops.quantize(jnp.asarray(x), jnp.asarray(s), jnp.asarray(z),
+                       use_pallas=True, interpret=True)
+    want = ref.quantize_ref(jnp.asarray(x), jnp.asarray(s), jnp.asarray(z))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# out_dtype overflow regression: the old int8 default wrapped 8-bit
+# unsigned tails (count 255 → -1)
+# --------------------------------------------------------------------------
+
+def test_infer_out_dtype():
+    assert infer_out_dtype(3, -2) == jnp.int8
+    assert infer_out_dtype(255, -128) == jnp.int8    # signed 8-bit fits
+    assert infer_out_dtype(255, 0) == jnp.int16      # unsigned 8-bit: 255
+    assert infer_out_dtype(2 ** 16, 0) == jnp.int32
+
+
+def test_multithreshold_default_dtype_no_overflow():
+    """8-bit unsigned tail: count reaches 255 and must not wrap negative
+    under the default output dtype (interpret mode)."""
+    x = jnp.full((8, 4), 10_000, jnp.int32)
+    thr = jnp.asarray(np.tile(np.arange(255, dtype=np.int32)[:, None],
+                              (1, 4)))
+    for out in (multithreshold(x, thr, interpret=True),
+                ref.multithreshold_ref(x, thr)):
+        arr = np.asarray(out)
+        assert arr.min() >= 0, "8-bit unsigned tail wrapped negative"
+        assert int(arr.max()) == 255
 
 
 @pytest.mark.parametrize("B,Sq,H,KV,hd,cap", [(2, 128, 4, 2, 64, 0.0),
