@@ -1,0 +1,139 @@
+"""Serving throughput: continuous batching + paged KV cache vs the
+static-batch engine, fp vs SIRA-derived int8 cache.
+
+For each batch-slot count: serve a queue of mixed-length requests
+(deeper than the slot count) through
+
+  * ``static``     — the pre-scheduler fixed-batch engine (waves of
+                     ``batch_slots``, every slot runs to the wave's max
+                     new tokens, one jitted call per prompt token);
+  * ``paged-fp``   — continuous batching, chunked jitted prefill, full-
+                     precision paged cache;
+  * ``paged-int8`` — same scheduler, int8 paged cache with per-layer/
+                     per-head scales from SIRA range analysis.
+
+Records tokens/s, mean TTFT (paged modes), slot occupancy, KV HBM bytes,
+and the paged-over-static speedup.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py \
+        [--slots 2 4] [--requests 12] [--quick] [--out BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def make_requests(cfg, n: int, seed: int = 0):
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab,
+                                        size=(int(rng.integers(4, 13)),)),
+                    max_new_tokens=int(rng.integers(4, 25)))
+            for _ in range(n)]
+
+
+def bench_static(model, params, reqs, slots: int, max_seq: int) -> dict:
+    from repro.serve import Request, ServingEngine
+
+    eng = ServingEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                        mode="static")
+    eng.generate([Request(prompt=np.asarray([1, 2, 3]),
+                          max_new_tokens=2)])          # jit warm-up
+    t0 = time.perf_counter()
+    outs = []
+    for i in range(0, len(reqs), slots):               # waves
+        outs.extend(eng.generate(reqs[i:i + slots]))
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    return dict(engine="static", tokens=toks, seconds=dt,
+                tokens_per_s=toks / dt, mean_ttft_s=None,
+                slot_occupancy=None, kv_hbm_bytes=None)
+
+
+def bench_paged(model, params, reqs, slots: int, max_seq: int,
+                kv_cache, label: str) -> dict:
+    from repro.serve import Request, ServingEngine
+
+    eng = ServingEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                        kv_cache=kv_cache)
+    eng.generate([Request(prompt=np.asarray([1, 2, 3]),
+                          max_new_tokens=2)])          # jit warm-up
+    eng.reset_metrics()
+    t0 = time.perf_counter()
+    outs = eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    m = eng.metrics.summary()
+    return dict(engine=label, tokens=toks, seconds=dt,
+                tokens_per_s=toks / dt, mean_ttft_s=m["mean_ttft_s"],
+                slot_occupancy=m["slot_occupancy"],
+                kv_hbm_bytes=eng.cache.hbm_bytes(),
+                int8_layers=eng.kv_spec.n_int8)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, nargs="+", default=[2, 4])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--quick", action="store_true",
+                    help="single slot count, fewer requests (CI smoke)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.slots, args.requests = [2], 6
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serve import derive_kv_spec
+
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec8 = derive_kv_spec(model, params)
+
+    results = []
+    for slots in args.slots:
+        reqs = make_requests(cfg, args.requests)
+        if spec8.n_int8 == 0:
+            print("WARNING: derive_kv_spec fell back to fp on every "
+                  "layer — the paged-int8 row measures an fp cache")
+        rows = [
+            bench_static(model, params, reqs, slots, args.max_seq),
+            bench_paged(model, params, make_requests(cfg, args.requests),
+                        slots, args.max_seq, "fp", "paged-fp"),
+            bench_paged(model, params, make_requests(cfg, args.requests),
+                        slots, args.max_seq, spec8, "paged-int8"),
+        ]
+        static_tps = rows[0]["tokens_per_s"]
+        for r in rows:
+            r.update(batch_slots=slots, requests=args.requests,
+                     speedup_vs_static=r["tokens_per_s"] / static_tps)
+            results.append(r)
+            ttft = (f"ttft={r['mean_ttft_s'] * 1e3:7.1f}ms"
+                    if r["mean_ttft_s"] is not None else "ttft=      n/a")
+            occ = (f"occ={r['slot_occupancy']:.2f}"
+                   if r["slot_occupancy"] is not None else "occ= n/a")
+            print(f"slots={slots} {r['engine']:10s} "
+                  f"{r['tokens_per_s']:7.1f} tok/s "
+                  f"({r['speedup_vs_static']:4.1f}x static) {ttft} {occ}",
+                  flush=True)
+
+    payload = dict(backend=jax.default_backend(),
+                   arch=cfg.name, requests=args.requests,
+                   int8_layers=f"{spec8.n_int8}/{len(spec8.layers)}",
+                   results=results)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,18 @@
-"""Batched serving with the SIRA-optimized integer path: int8 packed
-weights + int8 scaled-integer KV cache, compared to the bf16 baseline.
+"""Continuous-batching serving on the SIRA-optimized integer path:
+int8 packed weights + a paged KV cache whose int8 storage scales come
+from SIRA range analysis of the exported K/V projection graphs.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import get_model
 from repro.quant.quantizer import pack_weights_int8
-from repro.serve import Request, ServingEngine
+from repro.serve import Request, ServingEngine, derive_kv_spec
 
 
 def main() -> None:
@@ -20,28 +20,48 @@ def main() -> None:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(8,)),
-                    max_new_tokens=16) for _ in range(4)]
+    # a queue twice as deep as the slot count: the scheduler streams
+    # requests through freed slots instead of serving fixed waves
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab,
+                                        size=(int(rng.integers(4, 12)),)),
+                    max_new_tokens=int(rng.integers(8, 24)))
+            for _ in range(8)]
 
     eng_fp = ServingEngine(model, params, batch_slots=4, max_seq=64)
     t0 = time.time()
     out_fp = eng_fp.generate(reqs)
     t_fp = time.time() - t0
 
+    # int8 weights + SIRA-derived int8 KV cache (scales are per layer and
+    # per KV head, with fp fallback for any layer whose proven range is
+    # too wide — see serve/kv_cache.py).  The spec must be derived from
+    # the weights actually served: packing perturbs each projection by up
+    # to half a quant step, so fp-derived ranges would not cover it.
     params_q = pack_weights_int8(params, min_size=64)
-    eng_q = ServingEngine(model, params_q, batch_slots=4, max_seq=64)
+    spec = derive_kv_spec(model, params_q)
+    eng_q = ServingEngine(model, params_q, batch_slots=4, max_seq=64,
+                          kv_cache=spec)
     t0 = time.time()
     out_q = eng_q.generate(reqs)
     t_q = time.time() - t0
 
     agree = np.mean([a == b for fa, fb in zip(out_fp, out_q)
                      for a, b in zip(fa, fb)])
-    print(f"bf16 serving:  {t_fp:.2f}s  tokens: {out_fp[0][:8]}")
-    print(f"int8 serving:  {t_q:.2f}s  tokens: {out_q[0][:8]}")
+    m_fp, m_q = eng_fp.metrics.summary(), eng_q.metrics.summary()
+    print(f"fp serving:    {t_fp:.2f}s  "
+          f"ttft={m_fp['mean_ttft_s'] * 1e3:.1f}ms  "
+          f"occupancy={m_fp['slot_occupancy']:.2f}  "
+          f"kv={eng_fp.cache.hbm_bytes() / 1024:.0f} KiB")
+    print(f"int8 serving:  {t_q:.2f}s  "
+          f"ttft={m_q['mean_ttft_s'] * 1e3:.1f}ms  "
+          f"occupancy={m_q['slot_occupancy']:.2f}  "
+          f"kv={eng_q.cache.hbm_bytes() / 1024:.0f} KiB  "
+          f"({spec.n_int8}/{len(spec.layers)} layers int8)")
     print(f"greedy token agreement: {agree:.0%}")
-    print("(int8 weights halve HBM weight traffic on TPU; with the int8 "
-          "KV cache the decode memory term drops ~57% — EXPERIMENTS.md "
-          "§Perf)")
+    print("(int8 weights halve HBM weight traffic; the int8 paged cache "
+          "quarters KV storage vs f32 and frees pages the moment a "
+          "request finishes — the scales are proven ranges, so "
+          "saturation cannot occur in-range: A2Q-style guarantee)")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full test suite, fail-fast, from the repo root
 # (includes the kernel interpret-mode sweeps and the compiled-backend
-# equivalence tests), then the backend benchmark smoke run which emits
-# BENCH_backend.json.
+# equivalence tests), then the benchmark smoke runs which emit
+# BENCH_backend.json and BENCH_serving.json.
 #   bash scripts/tier1.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_backend.py \
     --quick --out BENCH_backend.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_serving.py \
+    --quick --out BENCH_serving.json

@@ -206,3 +206,94 @@ def init_kv_cache(batch: int, s_max: int, n_kv: int, hd: int, dtype
                   ) -> Dict[str, jnp.ndarray]:
     return {"k": jnp.zeros((batch, s_max, n_kv, hd), dtype),
             "v": jnp.zeros((batch, s_max, n_kv, hd), dtype)}
+
+
+# --------------------------------------------------------------------------
+# paged KV cache attention (serving path)
+# --------------------------------------------------------------------------
+
+def quantize_kv(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Scaled-integer KV storage: round(x / scale) saturated to int8.
+
+    ``scale`` is per-KV-head (KV,) — derived from SIRA range analysis of
+    the exported K/V projection graph (serve/kv_cache.py), so saturation
+    only triggers when an activation escapes its statically-proven range.
+    """
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1, -1, 1)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def paged_attention(params, x, k_pages, v_pages, page_table, lengths, *,
+                    n_heads, n_kv, hd, theta, page_size,
+                    logit_cap=0.0, quant=None, k_scale=None, v_scale=None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-token attention against a paged KV cache.
+
+    One function covers both serving phases: chunked prefill is a call
+    with B=1, T=chunk; batched decode is B=slots, T=1.
+
+      x          (B, T, d)    chunk of new tokens per slot
+      k_pages    (P, page_size, KV, hd)   shared physical page pool
+      v_pages    (P, page_size, KV, hd)   (int8 → scaled-integer storage)
+      page_table (B, n_pages) int32 physical page per logical page; page 0
+                 is the trash page (idle slots write there, never read live)
+      lengths    (B,) tokens already cached per slot; the chunk occupies
+                 logical positions [lengths[b], lengths[b] + T)
+
+    The chunk's K/V are written (quantized if the pool is int8) *before*
+    the read, so queries attend to the same storage roundtrip the next
+    step will see — keys at k_pos <= own position (causal within chunk
+    falls out of the position mask).  Dequantization happens here, folded
+    into the query scaling (K) and the PV output (V), per KV head.
+    Returns (y, k_pages, v_pages).
+    """
+    B, T, _ = x.shape
+    n_pages = page_table.shape[1]
+    S_v = n_pages * page_size
+    positions = lengths[:, None] + jnp.arange(T)[None, :]        # (B, T)
+    q, k, v = _qkv(params, x, n_heads, n_kv, hd, positions, theta, quant)
+
+    int_cache = k_pages.dtype == jnp.int8
+    if int_cache:
+        k_st, v_st = quantize_kv(k, k_scale), quantize_kv(v, v_scale)
+    else:
+        k_st = k.astype(k_pages.dtype)
+        v_st = v.astype(v_pages.dtype)
+
+    # scatter the chunk into its pages: position p lives in physical page
+    # page_table[b, p // page_size] at row p % page_size.  Positions past
+    # the table (pad tail of a prefill chunk at max_seq) are redirected to
+    # the trash page — take_along_axis would otherwise clamp them onto the
+    # last live page and corrupt it.
+    in_range = positions < S_v
+    page_ids = jnp.take_along_axis(
+        page_table, jnp.where(in_range, positions // page_size, 0), axis=1)
+    page_ids = jnp.where(in_range, page_ids, 0)                  # (B, T)
+    offs = jnp.where(in_range, positions % page_size, 0)
+    flat_p, flat_o = page_ids.reshape(-1), offs.reshape(-1)
+    k_pages = k_pages.at[flat_p, flat_o].set(k_st.reshape(B * T, n_kv, hd))
+    v_pages = v_pages.at[flat_p, flat_o].set(v_st.reshape(B * T, n_kv, hd))
+
+    # gather each slot's logical view (trash/garbage slots masked below)
+    kc = k_pages[page_table].reshape(B, S_v, n_kv, hd).astype(jnp.float32)
+    vc = v_pages[page_table].reshape(B, S_v, n_kv, hd).astype(jnp.float32)
+
+    groups = n_heads // n_kv
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, T, n_kv, groups, hd)
+    if int_cache:  # fold K dequant into q, per KV head
+        qf = qf * jnp.asarray(k_scale, jnp.float32).reshape(1, 1, n_kv, 1, 1)
+    s = jnp.einsum("btkgh,bskh->btkgs", qf, kc)
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(S_v)
+    mask = k_pos[None, None, :] <= positions[:, :, None]         # (B, T, S_v)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgs,bskh->btkgh", p, vc)
+    if int_cache:
+        out = out * jnp.asarray(v_scale, jnp.float32).reshape(1, 1, n_kv,
+                                                              1, 1)
+    out = out.reshape(B, T, n_heads * hd).astype(x.dtype)
+    y = linear(out, params["wo"], quant=quant)
+    return y, k_pages, v_pages

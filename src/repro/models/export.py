@@ -104,3 +104,49 @@ def export_block_graph(cfg: ArchConfig, w_bits: int = 4, a_bits: int = 4,
                                           hi=np.asarray(4.0))
     g.inputs = list(inputs)
     return g, inputs
+
+
+def export_kv_proj_graph(Wk: np.ndarray, Wv: np.ndarray, *,
+                         bk: np.ndarray = None, bv: np.ndarray = None,
+                         x_lo: float = -4.0, x_hi: float = 4.0,
+                         a_bits: int = 8, w_bits: int = 8
+                         ) -> Tuple[Graph, Dict[str, ScaledIntRange]]:
+    """K/V projection subgraph of one attention layer, built from the
+    *actual serving weights*, as a SIRA graph.
+
+    This is what makes the serving KV cache the first consumer of SIRA
+    ranges outside the graph IR: running ``core.propagate.analyze`` on
+    this graph yields per-output-channel value intervals for the K and V
+    tensors entering the cache (outputs ``k_mm`` / ``v_mm``), from which
+    ``serve.kv_cache`` derives guaranteed-coverage int8 storage scales
+    (A2Q-style: saturation only outside the statically-proven range).
+
+    The input X models the post-norm activation feeding wk/wv, quantized
+    per the serving activation precision; weights carry per-output-channel
+    Quant nodes so the MatMul propagates scaled-integer structure.
+    """
+    g = Graph(inputs=["X"], outputs=[])
+    s = g.add_initializer(max(abs(x_lo), abs(x_hi)) / (2 ** (a_bits - 1)))
+    z = g.add_initializer(0.0)
+    b = g.add_initializer(float(a_bits))
+    g.add_node("Quant", ["X", s, z, b], ["Xq"], dict(signed=1, narrow=0))
+    for name, W, bias in (("k", Wk, bk), ("v", Wv, bv)):
+        W = np.asarray(W, np.float64)
+        w = g.add_initializer(W, f"{name}_W")
+        sw = np.maximum(np.abs(W).max(axis=0) / (2 ** (w_bits - 1) - 1),
+                        1e-8)
+        ws = g.add_initializer(sw)
+        wb = g.add_initializer(float(w_bits))
+        g.add_node("Quant", [w, ws, z, wb], [f"{name}_Wq"],
+                   dict(signed=1, narrow=0))
+        if bias is not None:
+            g.add_node("MatMul", ["Xq", f"{name}_Wq"], [f"{name}_proj"])
+            bi = g.add_initializer(np.asarray(bias, np.float64),
+                                   f"{name}_b")
+            g.add_node("Add", [f"{name}_proj", bi], [f"{name}_mm"])
+        else:
+            g.add_node("MatMul", ["Xq", f"{name}_Wq"], [f"{name}_mm"])
+    g.outputs = ["k_mm", "v_mm"]
+    inputs = {"X": ScaledIntRange(lo=np.asarray(float(x_lo)),
+                                  hi=np.asarray(float(x_hi)))}
+    return g, inputs

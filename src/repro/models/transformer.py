@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from .attention import (attention_decode, attention_prefill, init_attention,
-                        init_kv_cache)
+                        init_kv_cache, paged_attention)
 from .common import (BATCH, MODEL, dense_init, embed_init, linear, rms_norm,
                      shard, softcap)
 from .mlp import apply_mlp, init_mlp
@@ -380,6 +380,68 @@ class Model:
                             cache["attn"]))
             new_cache = {"mamba": cm, "attn": ckv}
         return self._logits(params, x), new_cache
+
+    # ------------------------------------------------- paged decode path
+    @property
+    def supports_paged(self) -> bool:
+        """The paged serving path needs full-context attention at every
+        layer: SSM/hybrid carry recurrent state that paging cannot evict,
+        and sliding-window rolling caches pin physical layout to position."""
+        cfg = self.cfg
+        return cfg.family in ("dense", "vlm", "audio", "moe") and \
+            not cfg.sliding_window
+
+    def decode_paged(self, params, tokens, kv_pages, page_table, lengths, *,
+                     page_size: int, quant=None, kv_scales=None
+                     ) -> Tuple[jnp.ndarray, Any]:
+        """Multi-token step against a paged KV cache (serving path).
+
+        tokens (B, T) → (logits (B, T, V), new kv_pages).  Covers chunked
+        prefill (B=1, T=chunk) and batched continuous decode (B=slots,
+        T=1) with one code path — see ``attention.paged_attention``.
+
+        kv_pages: length-n_layers list of {"k": (P, page, KV, hd),
+        "v": ...} page pools — a Python list (not a stacked scan axis) so
+        each layer can carry its own storage dtype (int8 where SIRA
+        certifies the range, fp fallback elsewhere).  kv_scales: per-layer
+        (k_scale, v_scale) arrays for the int8 layers, None entries for fp
+        layers.  page_table (B, n_pages) and lengths (B,) are shared by
+        all layers (every layer sees the same token positions).
+        """
+        cfg = self.cfg
+        if not self.supports_paged:
+            raise NotImplementedError(
+                f"paged decode needs full-context attention — "
+                f"family={cfg.family!r} sliding_window={cfg.sliding_window}")
+        x = self._embed(params, tokens, None)
+        new_pages = []
+        for layer in range(cfg.n_layers):
+            p = jax.tree.map(lambda a, i=layer: a[i], params["layers"])
+            ks, vs = (kv_scales[layer] if kv_scales and
+                      kv_scales[layer] is not None else (None, None))
+            h, kp, vp = paged_attention(
+                p["attn"], rms_norm(x, p["ln1"]),
+                kv_pages[layer]["k"], kv_pages[layer]["v"], page_table,
+                lengths, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                hd=cfg.hd, theta=cfg.rope_theta, page_size=page_size,
+                logit_cap=cfg.attn_softcap, quant=quant,
+                k_scale=ks, v_scale=vs)
+            if cfg.post_norms:
+                h = rms_norm(h, p["post_ln1"])
+            x = x + h
+            if cfg.family == "moe":
+                h, _ = apply_moe(p["moe"], rms_norm(x, p["ln2"]),
+                                 top_k=cfg.moe.top_k,
+                                 capacity_factor=cfg.moe.capacity_factor,
+                                 act=cfg.mlp_act, quant=quant)
+            else:
+                h = apply_mlp(p["mlp"], rms_norm(x, p["ln2"]),
+                              act=cfg.mlp_act, quant=quant)
+            if cfg.post_norms:
+                h = rms_norm(h, p["post_ln2"])
+            x = x + h
+            new_pages.append({"k": kp, "v": vp})
+        return self._logits(params, x), new_pages
 
     # -------------------------------------------------------------- loss
     def loss(self, params, tokens, labels, frontend_embed=None, *,

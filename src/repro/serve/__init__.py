@@ -1,1 +1,17 @@
-from .engine import ServingEngine, Request  # noqa: F401
+"""Serving subsystem: continuous batching over a SIRA-quantized paged KV
+cache.  Public API:
+
+* ``ServingEngine`` — jitted chunked prefill + batched decode, vectorized
+  per-request sampling; paged mode with a static-batch fallback.
+* ``Request`` — prompt, max_new_tokens, temperature, eos_id.
+* ``Scheduler`` — FIFO admission, slot/page bookkeeping, termination,
+  preemption.
+* ``PagedKVCache`` / ``KVCacheSpec`` / ``derive_kv_spec`` — paged pool
+  with per-layer int8 scales from SIRA range analysis (fp fallback).
+* ``ServingMetrics`` — TTFT, token latency, tokens/s, slot occupancy.
+"""
+from .engine import ServingEngine                              # noqa: F401
+from .scheduler import Request, Scheduler                      # noqa: F401
+from .kv_cache import (PagedKVCache, KVCacheSpec, LayerKVSpec,  # noqa: F401
+                       derive_kv_spec, observe_block_inputs)
+from .metrics import ServingMetrics                            # noqa: F401

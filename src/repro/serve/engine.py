@@ -1,15 +1,29 @@
-"""Batched serving engine: prefill + KV-cached decode with continuous
-request slots.
+"""Serving engine: continuous batching over a SIRA-quantized paged KV
+cache (full-context attention families), with a static-batch fallback for
+model families whose state cannot be paged (SSM/hybrid recurrent state,
+sliding-window rolling caches).
 
-The engine keeps a fixed pool of batch slots; finished sequences free
-their slot for the next queued request (continuous batching at step
-granularity).  Sampling: greedy or temperature.  The quantized path runs
-the model with QAT fake-quant (matching the SIRA-analyzed integer graph).
+Paged mode (the default wherever ``model.supports_paged``):
+
+* prompts are prefilled in **jitted multi-token chunks** — one call per
+  ``prefill_chunk`` tokens (B=1), not one call per token;
+* decode runs one jitted call per step over *all* slots with per-slot
+  cache lengths — requests at different positions batch together;
+* the scheduler admits from a FIFO queue into freed slots between steps,
+  terminates per request (EOS / max_new_tokens), and preempts the newest
+  request when the page pool runs dry;
+* KV storage is int8 with per-layer/per-head scales derived from SIRA
+  range analysis of the exported K/V projection graph
+  (``kv_cache.derive_kv_spec``), fp fallback per layer.
+
+Sampling is vectorized (one ``jax.random.categorical`` over the batch via
+vmap, per-request temperature) and deterministic per request: the key is
+``fold_in(fold_in(seed, request_id), token_index)``, so a request draws
+the same tokens whether it is served alone or packed with others.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,52 +32,234 @@ import numpy as np
 from repro.models.transformer import Model
 from repro.quant.quantizer import QuantSpec
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray             # (S_prompt,)
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    out_tokens: Optional[List[int]] = None
+from .kv_cache import KVCacheSpec, PagedKVCache, derive_kv_spec
+from .metrics import ServingMetrics
+from .scheduler import Request, Scheduler
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, batch_slots: int,
                  max_seq: int, quant: Optional[QuantSpec] = None,
-                 seed: int = 0):
+                 seed: int = 0, *,
+                 kv_cache: Union[str, KVCacheSpec] = "fp",
+                 page_size: int = 8, prefill_chunk: int = 8,
+                 num_pages: Optional[int] = None,
+                 mode: Optional[str] = None):
+        """kv_cache: "fp" | "sira-int8" | a prebuilt KVCacheSpec.
+        mode: None (auto), "paged", or "static" (the pre-scheduler
+        fixed-batch engine, kept for unpageable families and as the
+        benchmark baseline)."""
         self.model = model
         self.params = params
         self.B = batch_slots
         self.S = max_seq
         self.quant = quant
-        self.rng = jax.random.PRNGKey(seed)
+        self.seed = seed
+        self.prefill_chunk = prefill_chunk
+        if mode is None:
+            mode = "paged" if model.supports_paged else "static"
+        if mode == "paged" and not model.supports_paged:
+            raise NotImplementedError(
+                f"paged serving needs full-context attention — "
+                f"family={model.cfg.family!r} "
+                f"sliding_window={model.cfg.sliding_window}")
+        if mode == "static" and kv_cache != "fp":
+            raise ValueError(
+                "static mode serves a full-precision cache — a quantized "
+                "kv_cache would be silently ignored")
+        self.mode = mode
 
-        self._decode = jax.jit(
-            lambda p, t, c, i, v: model.decode_step(p, t, c, i,
-                                                    quant=quant,
-                                                    valid_from=v))
+        def sample(logits, temps, rids, steps):
+            lg = logits.astype(jnp.float32)
+            greedy = jnp.argmax(lg, axis=-1)
 
+            def one(rid, step, row, temp):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.PRNGKey(seed), rid), step)
+                return jax.random.categorical(
+                    key, row / jnp.maximum(temp, 1e-6))
+
+            sampled = jax.vmap(one)(rids, steps, lg, temps)
+            return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+        self._sample_fn = jax.jit(sample)
+
+        if mode == "paged":
+            cfg = model.cfg
+            if isinstance(kv_cache, KVCacheSpec):
+                spec = kv_cache
+            elif kv_cache == "fp":
+                spec = KVCacheSpec.all_fp(cfg.n_layers)
+            elif kv_cache in ("sira-int8", "int8"):
+                spec = derive_kv_spec(model, params)
+            else:
+                raise ValueError(f"unknown kv_cache {kv_cache!r}")
+            self.kv_spec = spec
+            self.cache = PagedKVCache(cfg, spec, batch_slots, max_seq,
+                                      page_size=page_size,
+                                      num_pages=num_pages)
+            self.metrics = ServingMetrics()
+            self.scheduler = Scheduler(batch_slots, max_seq, self.cache,
+                                       self.metrics)
+            kv_scales = spec.scales()
+            self._step_fn = jax.jit(
+                lambda p, t, pages, table, lens: model.decode_paged(
+                    p, t, pages, table, lens, page_size=page_size,
+                    quant=quant, kv_scales=kv_scales))
+        else:
+            self._decode = jax.jit(
+                lambda p, t, c, i, v: model.decode_step(
+                    p, t, c, i, quant=quant, valid_from=v))
+
+    # ------------------------------------------------------- paged mode
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its request id (also its PRNG id)."""
+        if self.mode != "paged":
+            raise NotImplementedError("submit() requires paged mode")
+        return self.scheduler.submit(request)
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit + prefill new requests, then one
+        batched decode step.  Returns False when there is nothing to do."""
+        if self.mode != "paged":
+            raise NotImplementedError("step() requires paged mode")
+        sched = self.scheduler
+        if not sched.has_work():
+            return False
+        for slot, entry in sched.admit():
+            self._prefill(slot, entry)
+        self._decode_once()
+        return True
+
+    def run(self) -> None:
+        while self.step():
+            pass
+
+    def reset_metrics(self) -> None:
+        """Fresh counters (e.g. after a jit warm-up run)."""
+        if self.mode != "paged":
+            raise NotImplementedError("metrics require paged mode")
+        self.metrics = ServingMetrics()
+        self.scheduler.metrics = self.metrics
+
+    def _prefill(self, slot: int, entry) -> None:
+        """Chunked jitted multi-token prefill of one slot (B=1): one
+        ``decode_paged`` call per ``prefill_chunk`` tokens, then sample
+        the first continuation token from the last prompt position."""
+        seq = entry.seq
+        L = len(seq)
+        C = self.prefill_chunk
+        table = self.cache.slot_table(slot)
+        logits = None
+        for start in range(0, L, C):
+            chunk = seq[start:start + C]
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :len(chunk)] = chunk
+            logits, pages = self._step_fn(
+                self.params, jnp.asarray(toks), self.cache.pages, table,
+                jnp.full((1,), start, jnp.int32))
+            self.cache.pages = pages
+            self.metrics.on_prefill_chunk()
+        self.scheduler.set_prefilled(slot, L)
+
+        req = entry.request
+        last = (L - 1) % C          # last real prompt token in final chunk
+        tok = self._sample_fn(
+            logits[:, last],
+            jnp.full((1,), req.temperature, jnp.float32),
+            jnp.full((1,), entry.prng_id, jnp.int32),
+            jnp.full((1,), entry.n_generated, jnp.int32))
+        handle = entry.handle
+        done = self.scheduler.record_token(slot, int(np.asarray(tok)[0]))
+        self.metrics.on_token(handle)
+        if done:
+            self.metrics.on_finish(handle)
+
+    def _decode_once(self) -> None:
+        sched = self.scheduler
+        # every slot must map the write position `length`; growth may need
+        # a fresh page at page boundaries — preempt newest-admitted when
+        # the pool is dry (possibly the needy slot itself)
+        for i in sorted(sched.active_slots(),
+                        key=lambda i: sched.slots[i].admit_seq):
+            while True:
+                st = sched.slots[i]
+                if st is None:          # lost its slot as preemption victim
+                    break
+                if self.cache.grow(i, st.length + 1):
+                    break
+                sched.preempt(sched.newest_active())
+        active = sched.active_slots()
+        if not active:
+            return
+        B = self.B
+        toks = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        rids = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        for i in active:
+            st = sched.slots[i]
+            toks[i] = st.entry.seq[-1]       # sampled, not yet cached
+            lens[i] = st.length
+            temps[i] = st.entry.request.temperature
+            rids[i] = st.entry.prng_id
+            steps[i] = st.entry.n_generated
+        logits, pages = self._step_fn(
+            self.params, jnp.asarray(toks)[:, None], self.cache.pages,
+            self.cache.device_table(), jnp.asarray(lens))
+        self.cache.pages = pages
+        nxt = np.asarray(self._sample_fn(
+            logits[:, -1], jnp.asarray(temps), jnp.asarray(rids),
+            jnp.asarray(steps)))
+        self.metrics.on_decode_step(len(active), B)
+        for i in active:
+            sched.note_cache_write(i)
+            handle = sched.slots[i].entry.handle
+            done = sched.record_token(i, int(nxt[i]))
+            self.metrics.on_token(handle)
+            if done:
+                self.metrics.on_finish(handle)
+
+    # ---------------------------------------------------------- generate
     def generate(self, requests: List[Request]) -> List[List[int]]:
-        """Serve a batch of ≤ batch_slots requests to completion.
+        """Serve requests to completion; outputs in submission order.
 
-        Prompts are left-padded to a common length so every request's
-        last prompt token lands on the same decode step.  The pad slots
-        do get decoded into the KV cache, but ``valid_from`` masks them
-        out of every attention read and shifts RoPE positions per slot,
-        so each row computes exactly what it would when served alone.
-        Mixed-length batches are rejected for model families where pad
-        tokens cannot be masked retroactively (SSM/hybrid state updates,
-        sliding-window rolling caches)."""
+        Paged mode accepts any number of requests (the queue can be
+        deeper than ``batch_slots``); static mode keeps the fixed-batch
+        contract of the pre-scheduler engine."""
+        if self.mode == "paged":
+            rids = [self.submit(r) for r in requests]
+            self.run()
+            return [self.scheduler.outputs[rid] for rid in rids]
+        return self._generate_static(requests)
+
+    # ------------------------------------------------------ static mode
+    def _generate_static(self, requests: List[Request]) -> List[List[int]]:
+        """Static-batch fallback (≤ batch_slots requests, no paging).
+
+        Prompts are left-padded to a common length; ``valid_from`` masks
+        pad slots out of attention and shifts RoPE per slot, so each row
+        computes exactly what it would when served alone.  Mixed-length
+        batches are rejected for model families where pad tokens cannot
+        be masked retroactively (SSM/hybrid state updates, sliding-window
+        rolling caches).  Finished rows (EOS / max_new_tokens) stop
+        accumulating tokens and the loop exits once every row is done."""
         assert len(requests) <= self.B
         outs: List[List[int]] = [[] for _ in requests]
         L = max(len(r.prompt) for r in requests)
+        # rows are padded to a common prompt length, so the cache must
+        # hold the padded prompt plus the largest per-request budget
+        # (dynamic_update_slice would silently clamp out-of-range writes)
+        need = L + max(r.max_new_tokens for r in requests)
+        if need > self.S:
+            raise ValueError(
+                f"padded prompt ({L}) + max_new_tokens exceeds "
+                f"max_seq {self.S} (need {need})")
         needs_mask = any(len(r.prompt) != L for r in requests)
         cfg = self.model.cfg
         if needs_mask and (cfg.sliding_window or
                            cfg.family in ("ssm", "hybrid")):
-            # rolling local caches and SSM state updates cannot mask pad
-            # tokens out retroactively — refuse rather than silently
-            # serve corrupted shorter prompts
             raise NotImplementedError(
                 f"mixed-length batches are not supported for "
                 f"family={cfg.family!r} sliding_window={cfg.sliding_window}"
@@ -80,28 +276,42 @@ class ServingEngine:
             logits, cache = self._decode(
                 self.params, jnp.asarray(toks[:, t:t + 1]), cache,
                 jnp.asarray(t, jnp.int32), valid_from)
-        max_new = max(r.max_new_tokens for r in requests)
-        cur = self._sample(logits, requests)
+
+        n = len(requests)
+        temps = np.zeros((self.B,), np.float32)
+        rids = np.zeros((self.B,), np.int32)
+        for i, r in enumerate(requests):
+            temps[i] = r.temperature
+            rids[i] = i if r.request_id is None else r.request_id
+        temps_j, rids_j = jnp.asarray(temps), jnp.asarray(rids)
+        done = np.array([False] * self.B)
+        done[n:] = True
+        steps = np.zeros((self.B,), np.int32)
+
+        def sample(lg):
+            return np.asarray(self._sample_fn(
+                lg[:, -1], temps_j, rids_j, jnp.asarray(steps)))
+
+        cur = sample(logits)
         for i, r in enumerate(requests):
             outs[i].append(int(cur[i]))
-        for step in range(1, max_new):
+            steps[i] = 1
+            if r.max_new_tokens <= 1 or (r.eos_id is not None and
+                                         cur[i] == r.eos_id):
+                done[i] = True
+        step = 1
+        while not done.all():
             logits, cache = self._decode(
                 self.params, jnp.asarray(cur).reshape(self.B, 1), cache,
                 jnp.asarray(L + step - 1, jnp.int32), valid_from)
-            cur = self._sample(logits, requests)
+            cur = sample(logits)
             for i, r in enumerate(requests):
-                if step < r.max_new_tokens:
-                    outs[i].append(int(cur[i]))
+                if done[i]:
+                    continue
+                outs[i].append(int(cur[i]))
+                steps[i] += 1
+                if steps[i] >= r.max_new_tokens or (
+                        r.eos_id is not None and cur[i] == r.eos_id):
+                    done[i] = True
+            step += 1
         return outs
-
-    def _sample(self, logits, requests) -> np.ndarray:
-        lg = np.asarray(logits[:, -1].astype(jnp.float32))
-        out = np.zeros((self.B,), np.int32)
-        for i, r in enumerate(requests):
-            if r.temperature <= 0:
-                out[i] = int(lg[i].argmax())
-            else:
-                self.rng, k = jax.random.split(self.rng)
-                out[i] = int(jax.random.categorical(
-                    k, jnp.asarray(lg[i] / r.temperature)))
-        return out

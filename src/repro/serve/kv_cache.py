@@ -1,0 +1,246 @@
+"""Paged KV cache with SIRA-derived scaled-integer storage.
+
+Two halves:
+
+* **Spec derivation** (`derive_kv_spec`): for every attention layer,
+  export the K/V projection subgraph with the *actual serving weights*
+  (`models.export.export_kv_proj_graph`) and run the SIRA range analysis
+  (`core.propagate.analyze`) over it.  The per-output-channel value
+  intervals of the K/V tensors reduce to per-KV-head amax bounds (K is
+  widened by sqrt(2) for the RoPE rotation hull), giving int8 storage
+  scales with a *static coverage guarantee* — saturation can only trigger
+  on activations that escape their proven range (A2Q-style, Colbert et
+  al. 2023).  A layer falls back to full-precision storage when its bound
+  is non-finite or so wide that the int8 step exceeds ``max_step``
+  (resolution cliff).  Optionally, per-layer `MinMaxObserver`s
+  (`quant.calibrate`) over real token batches tighten the analyzed input
+  range from the default post-norm assumption.
+
+* **Page pool** (`PagedKVCache`): fixed pool of physical pages per layer
+  (device arrays), a host-side page table (slots x logical pages) and
+  free list.  Slots own pages only for the tokens they actually hold;
+  finished requests return pages to the pool immediately, which is what
+  lets the scheduler admit a queue much deeper than ``batch_slots``
+  without sizing HBM for the worst case.  Physical page 0 is reserved as
+  the trash page: idle slots' writes land there and it is never mapped
+  to a live position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.propagate import analyze
+from repro.models.export import export_kv_proj_graph
+from repro.quant.calibrate import MinMaxObserver
+from repro.quant.quantizer import QuantSpec
+
+# RoPE rotates channel pairs within a head: |k'| <= sqrt(k1^2 + k2^2)
+# <= sqrt(2) * max(|k1|, |k2|), so a per-head pre-rotation amax bound
+# widens by sqrt(2) to cover the stored (post-RoPE) keys.
+ROPE_HULL = math.sqrt(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKVSpec:
+    """Storage decision for one attention layer's KV cache."""
+    int8: bool
+    k_scale: Optional[np.ndarray] = None    # (KV,) int8 step per head
+    v_scale: Optional[np.ndarray] = None
+    k_amax: Optional[np.ndarray] = None     # (KV,) proven |K| bound
+    v_amax: Optional[np.ndarray] = None
+    reason: str = ""                        # why fp fallback, if not int8
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Per-layer storage plan for the paged cache."""
+    layers: Tuple[LayerKVSpec, ...]
+
+    @property
+    def n_int8(self) -> int:
+        return sum(1 for l in self.layers if l.int8)
+
+    def scales(self) -> List[Optional[Tuple[np.ndarray, np.ndarray]]]:
+        """Per-layer (k_scale, v_scale) for ``Model.decode_paged``."""
+        return [(l.k_scale, l.v_scale) if l.int8 else None
+                for l in self.layers]
+
+    @staticmethod
+    def all_fp(n_layers: int) -> "KVCacheSpec":
+        return KVCacheSpec(tuple(LayerKVSpec(int8=False, reason="fp cache")
+                                 for _ in range(n_layers)))
+
+
+def _layer_weights(params, layer: int):
+    """(Wk, Wv, bk, bv) of one stacked layer, dequantizing packed int8."""
+    attn = params["layers"]["attn"]
+
+    def get(w):
+        w = jax.tree.map(lambda a, i=layer: a[i], w)
+        if isinstance(w, dict):                  # packed {q: int8, s: f32}
+            return np.asarray(w["q"], np.float64) * np.asarray(
+                w["s"], np.float64)
+        return np.asarray(w, np.float64)
+
+    bk = get(attn["bk"]) if "bk" in attn else None
+    bv = get(attn["bv"]) if "bv" in attn else None
+    return get(attn["wk"]), get(attn["wv"]), bk, bv
+
+
+def observe_block_inputs(model, params, token_batches: Iterable
+                         ) -> List[Tuple[float, float]]:
+    """Per-layer ``MinMaxObserver`` over the post-norm activations feeding
+    the K/V projections, walked layer by layer on real token batches.
+
+    Returns per-layer (lo, hi) to replace the default calibrated-range
+    assumption in ``derive_kv_spec`` — calibration tightens the SIRA input
+    interval; the propagation itself stays static and guaranteed.
+    """
+    from repro.models.common import rms_norm
+    from repro.models.transformer import (_dense_layer_fwd, _moe_layer_fwd)
+
+    cfg = model.cfg
+    obs = [MinMaxObserver(QuantSpec(bits=8)) for _ in range(cfg.n_layers)]
+    for toks in token_batches:
+        x = model._embed(params, jnp.asarray(toks), None)
+        for layer in range(cfg.n_layers):
+            p = jax.tree.map(lambda a, i=layer: a[i], params["layers"])
+            obs[layer].update(np.asarray(
+                rms_norm(x, p["ln1"]).astype(jnp.float32)))
+            if cfg.family == "moe":
+                x, _ = _moe_layer_fwd(p, x, cfg)
+            else:
+                x = _dense_layer_fwd(p, x, cfg, window=0)
+    return [(o.lo, o.hi) for o in obs]
+
+
+def derive_kv_spec(model, params, *, x_range: Tuple[float, float] = (-4., 4.),
+                   a_bits: int = 8, max_step: float = 0.5,
+                   calib_token_batches: Optional[Iterable] = None
+                   ) -> KVCacheSpec:
+    """SIRA-derived per-layer/per-head int8 KV-cache scales.
+
+    ``x_range`` is the assumed post-norm activation interval feeding the
+    K/V projections (export.py convention); pass ``calib_token_batches``
+    to replace it with per-layer observed ranges.  ``max_step`` is the
+    fp-fallback threshold: a layer stays full-precision when its int8
+    resolution (amax / 127) would exceed it.
+    """
+    cfg = model.cfg
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    ranges = ([tuple(map(float, r)) for r in
+               observe_block_inputs(model, params, calib_token_batches)]
+              if calib_token_batches is not None
+              else [x_range] * cfg.n_layers)
+
+    layers = []
+    for layer in range(cfg.n_layers):
+        Wk, Wv, bk, bv = _layer_weights(params, layer)
+        lo, hi = ranges[layer]
+        g, inputs = export_kv_proj_graph(Wk, Wv, bk=bk, bv=bv,
+                                         x_lo=lo, x_hi=hi, a_bits=a_bits)
+        r = analyze(g, inputs)
+
+        def head_amax(rng, rope: bool) -> np.ndarray:
+            amax = np.maximum(np.abs(np.asarray(rng.lo)),
+                              np.abs(np.asarray(rng.hi)))
+            amax = amax.reshape(KV, hd).max(axis=1)
+            return amax * (ROPE_HULL if rope else 1.0)
+
+        k_amax = head_amax(r["k_mm"], rope=True)
+        v_amax = head_amax(r["v_mm"], rope=False)
+        worst = float(max(k_amax.max(), v_amax.max()))
+        if not np.isfinite(worst):
+            layers.append(LayerKVSpec(int8=False, k_amax=k_amax,
+                                      v_amax=v_amax,
+                                      reason="non-finite SIRA bound"))
+        elif worst / 127.0 > max_step:
+            layers.append(LayerKVSpec(
+                int8=False, k_amax=k_amax, v_amax=v_amax,
+                reason=f"int8 step {worst / 127.0:.3g} > "
+                       f"max_step {max_step:g}"))
+        else:
+            layers.append(LayerKVSpec(
+                int8=True,
+                k_scale=np.maximum(k_amax / 127.0, 1e-8),
+                v_scale=np.maximum(v_amax / 127.0, 1e-8),
+                k_amax=k_amax, v_amax=v_amax))
+    return KVCacheSpec(tuple(layers))
+
+
+class PagedKVCache:
+    """Shared physical page pool + host-side page table / free list.
+
+    Device state: per-layer {"k", "v"} pools of shape
+    (num_pages, page_size, KV, hd) — int8 for SIRA-certified layers, fp
+    otherwise.  The jitted step functions consume/return the pools; the
+    table and free list are plain numpy/python updated between steps.
+    """
+
+    def __init__(self, cfg, spec: KVCacheSpec, batch_slots: int,
+                 max_seq: int, page_size: int = 16,
+                 num_pages: Optional[int] = None, fp_dtype=None):
+        assert len(spec.layers) == cfg.n_layers
+        self.cfg = cfg
+        self.spec = spec
+        self.page_size = page_size
+        self.slots = batch_slots
+        self.max_pages = -(-max_seq // page_size)
+        # default pool: worst case (every slot full) + trash page
+        self.num_pages = num_pages or batch_slots * self.max_pages + 1
+        assert self.num_pages >= self.max_pages + 1, \
+            "pool must hold at least one full-length request"
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        fp_dtype = fp_dtype or cfg.dtype
+        shape = (self.num_pages, page_size, KV, hd)
+        self.pages = [
+            {"k": jnp.zeros(shape, jnp.int8 if l.int8 else fp_dtype),
+             "v": jnp.zeros(shape, jnp.int8 if l.int8 else fp_dtype)}
+            for l in spec.layers]
+        self.table = np.zeros((batch_slots, self.max_pages), np.int32)
+        self.free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self.owned: List[List[int]] = [[] for _ in range(batch_slots)]
+
+    # ------------------------------------------------------- allocation
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def grow(self, slot: int, new_len: int) -> bool:
+        """Ensure the slot maps every logical position < new_len.
+
+        Returns False (no change) when the pool cannot satisfy it — the
+        scheduler then preempts or defers admission."""
+        need = self.pages_for(new_len) - len(self.owned[slot])
+        if need > len(self.free):
+            return False
+        for _ in range(max(need, 0)):
+            pg = self.free.pop()
+            self.table[slot, len(self.owned[slot])] = pg
+            self.owned[slot].append(pg)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return the slot's pages to the pool (request finished/evicted)."""
+        self.free.extend(reversed(self.owned[slot]))
+        self.owned[slot] = []
+        self.table[slot, :] = 0
+
+    # ------------------------------------------------------------ views
+    def device_table(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)
+
+    def slot_table(self, slot: int) -> jnp.ndarray:
+        return jnp.asarray(self.table[slot:slot + 1])
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - 1 - len(self.free)
+
+    def hbm_bytes(self) -> int:
+        return sum(p["k"].nbytes + p["v"].nbytes for p in self.pages)

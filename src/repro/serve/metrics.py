@@ -1,0 +1,129 @@
+"""Serving metrics: TTFT, per-token latency, throughput, slot occupancy.
+
+Pure host-side bookkeeping updated by the scheduler/engine between jitted
+steps; ``clock`` is injectable so tests can drive deterministic time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    request_id: int
+    submit_t: float
+    prompt_tokens: int = 0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.token_times)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+
+class ServingMetrics:
+    """Counters surfaced by the serving engine.
+
+    * TTFT — submit → first generated token, per request (includes queue
+      wait, which is the point: it exposes scheduling quality).
+    * per-token latency — mean gap between consecutive generated tokens.
+    * tokens/s — generated tokens over the busy wall-clock window.
+    * slot occupancy — active slot-steps / (slots x decode steps): how
+      much of the batch the scheduler actually kept filled.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.requests: Dict[int, RequestRecord] = {}
+        self.decode_steps = 0
+        self.active_slot_steps = 0
+        self.slot_capacity = 0
+        self.prefill_chunks = 0
+        self.preemptions = 0
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ----------------------------------------------------------- events
+    def on_submit(self, request_id: int, prompt_tokens: int) -> None:
+        t = self.clock()
+        self.requests[request_id] = RequestRecord(request_id, t,
+                                                  prompt_tokens)
+        if self._t0 is None:
+            self._t0 = t
+
+    def on_prefill_chunk(self) -> None:
+        self.prefill_chunks += 1
+
+    def on_token(self, request_id: int) -> None:
+        r = self.requests[request_id]
+        t = self.clock()
+        if r.first_token_t is None:
+            r.first_token_t = t
+        r.token_times.append(t)
+        self._t_last = t
+
+    def on_finish(self, request_id: int) -> None:
+        self.requests[request_id].finish_t = self.clock()
+
+    def on_decode_step(self, active_slots: int, total_slots: int) -> None:
+        self.decode_steps += 1
+        self.active_slot_steps += active_slots
+        self.slot_capacity += total_slots
+
+    def on_preemption(self, request_id: int) -> None:
+        self.preemptions += 1
+        self.requests[request_id].preemptions += 1
+
+    # ------------------------------------------------------- aggregates
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.n_tokens for r in self.requests.values())
+
+    @property
+    def mean_ttft(self) -> float:
+        ts = [r.ttft for r in self.requests.values() if r.ttft is not None]
+        return sum(ts) / len(ts) if ts else float("nan")
+
+    @property
+    def mean_token_latency(self) -> float:
+        gaps = []
+        for r in self.requests.values():
+            gaps.extend(b - a for a, b in zip(r.token_times,
+                                              r.token_times[1:]))
+        return sum(gaps) / len(gaps) if gaps else float("nan")
+
+    @property
+    def tokens_per_s(self) -> float:
+        if self._t0 is None or self._t_last is None or \
+                self._t_last <= self._t0:
+            return float("nan")
+        return self.total_tokens / (self._t_last - self._t0)
+
+    @property
+    def slot_occupancy(self) -> float:
+        if not self.slot_capacity:
+            return float("nan")
+        return self.active_slot_steps / self.slot_capacity
+
+    def summary(self) -> Dict[str, float]:
+        return dict(
+            requests=len(self.requests),
+            total_tokens=self.total_tokens,
+            decode_steps=self.decode_steps,
+            prefill_chunks=self.prefill_chunks,
+            preemptions=self.preemptions,
+            mean_ttft_s=self.mean_ttft,
+            mean_token_latency_s=self.mean_token_latency,
+            tokens_per_s=self.tokens_per_s,
+            slot_occupancy=self.slot_occupancy,
+        )

@@ -1,0 +1,184 @@
+"""Paged KV cache: SIRA-derived scales, int8 accuracy bound, page pool.
+
+The KV-cache scales are the first consumer of SIRA ranges outside the
+graph IR: `derive_kv_spec` exports each layer's K/V projection with the
+actual serving weights, runs `core.propagate.analyze`, and reduces the
+per-output-channel intervals to per-KV-head int8 steps (K widened by
+sqrt(2) for the RoPE rotation hull).  These tests pin that the scales
+really come from the analysis (they track the weights), that the fp
+fallback engages, and that the int8 cache stays within a documented
+tolerance of the fp cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import (KVCacheSpec, PagedKVCache, Request, ServingEngine,
+                         derive_kv_spec)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# spec derivation
+# ---------------------------------------------------------------------------
+
+def test_spec_is_derived_from_range_analysis(setup):
+    """Scales are per layer and per KV head, positive, and *track the
+    weights*: doubling wk/wv doubles the proven ranges and therefore the
+    scales (nothing is hardcoded)."""
+    cfg, model, params = setup
+    spec = derive_kv_spec(model, params)
+    assert len(spec.layers) == cfg.n_layers
+    for l in spec.layers:
+        assert l.int8
+        assert l.k_scale.shape == (cfg.n_kv_heads,)
+        assert l.v_scale.shape == (cfg.n_kv_heads,)
+        assert np.all(l.k_scale > 0) and np.all(l.v_scale > 0)
+        # the scale covers the proven bound exactly: amax = 127 * scale
+        np.testing.assert_allclose(l.k_scale * 127.0, l.k_amax, rtol=1e-6)
+
+    attn = dict(params["layers"]["attn"])
+    attn["wk"] = attn["wk"] * 2.0
+    attn["wv"] = attn["wv"] * 2.0
+    params2 = dict(params, layers=dict(params["layers"], attn=attn))
+    # loose fallback threshold: the doubled ranges must stay int8 so the
+    # scales can be compared
+    spec2 = derive_kv_spec(model, params2, max_step=10.0)
+    for l1, l2 in zip(spec.layers, spec2.layers):
+        np.testing.assert_allclose(l2.k_scale, 2.0 * l1.k_scale, rtol=0.05)
+        np.testing.assert_allclose(l2.v_scale, 2.0 * l1.v_scale, rtol=0.05)
+
+
+def test_fp_fallback_per_layer(setup):
+    """A layer whose int8 step would exceed max_step falls back to fp
+    storage — and an all-fallback spec still serves, bit-identical to the
+    plain fp cache."""
+    cfg, model, params = setup
+    spec = derive_kv_spec(model, params, max_step=1e-6)
+    assert spec.n_int8 == 0
+    assert all("max_step" in l.reason for l in spec.layers)
+    assert spec.scales() == [None] * cfg.n_layers
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(5,))
+    o_fb = ServingEngine(model, params, batch_slots=1, max_seq=32,
+                         kv_cache=spec).generate(
+        [Request(prompt=prompt, max_new_tokens=5)])[0]
+    o_fp = ServingEngine(model, params, batch_slots=1, max_seq=32).generate(
+        [Request(prompt=prompt, max_new_tokens=5)])[0]
+    assert o_fb == o_fp
+
+
+def test_calibration_tightens_scales(setup):
+    """MinMaxObserver calibration of the per-layer block-input range
+    (quant/calibrate.py) tightens the analyzed intervals vs the default
+    post-norm assumption — scales shrink, resolution improves."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    spec = derive_kv_spec(model, params)
+    spec_c = derive_kv_spec(
+        model, params,
+        calib_token_batches=[rng.integers(0, cfg.vocab, size=(2, 16))])
+    for l, lc in zip(spec.layers, spec_c.layers):
+        assert lc.k_scale.mean() < l.k_scale.mean()
+        assert lc.v_scale.mean() < l.v_scale.mean()
+
+
+# ---------------------------------------------------------------------------
+# int8 accuracy
+# ---------------------------------------------------------------------------
+
+def _teacher_forced_logits(cfg, model, params, spec, seq, page=8):
+    cache = PagedKVCache(cfg, spec, 1, 32, page_size=page)
+    cache.grow(0, len(seq))
+    scales = spec.scales()
+    step = jax.jit(lambda p, t, pg, tab, ln: model.decode_paged(
+        p, t, pg, tab, ln, page_size=page, kv_scales=scales))
+    outs = []
+    for start in range(0, len(seq), page):
+        lg, pages = step(params, jnp.asarray(seq[None, start:start + page]),
+                         cache.pages, cache.device_table(),
+                         jnp.full((1,), start, jnp.int32))
+        cache.pages = pages
+        outs.append(np.asarray(lg[0].astype(jnp.float32)))
+    return np.concatenate(outs, axis=0)
+
+
+def test_int8_cache_logits_within_tolerance(setup):
+    """Documented accuracy bound: on the reduced transformer, teacher-
+    forced logits with the SIRA-int8 cache stay within 2% of the fp
+    cache's logit scale at every position (measured ~0.5%; the bound
+    gives 4x headroom).  Calibrated scales must not be worse than 1.2x
+    the static-bound error."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    seq = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+
+    l_fp = _teacher_forced_logits(cfg, model, params,
+                                  KVCacheSpec.all_fp(cfg.n_layers), seq)
+    l_i8 = _teacher_forced_logits(cfg, model, params,
+                                  derive_kv_spec(model, params), seq)
+    scale = np.abs(l_fp).max()
+    err = np.abs(l_fp - l_i8).max()
+    assert err < 0.02 * scale, (err, scale)
+
+    spec_c = derive_kv_spec(
+        model, params,
+        calib_token_batches=[rng.integers(0, cfg.vocab, size=(2, 16))])
+    err_c = np.abs(l_fp - _teacher_forced_logits(cfg, model, params,
+                                                 spec_c, seq)).max()
+    assert err_c < 1.2 * err, (err_c, err)
+
+
+# ---------------------------------------------------------------------------
+# page pool
+# ---------------------------------------------------------------------------
+
+def test_page_pool_bookkeeping(setup):
+    cfg, model, params = setup
+    spec = KVCacheSpec.all_fp(cfg.n_layers)
+    assert PagedKVCache(cfg, spec, batch_slots=2, max_seq=32,
+                        page_size=8).num_pages == 2 * 4 + 1  # default pool
+    # undersized pool (6 usable pages) to exercise refusal + release
+    cache = PagedKVCache(cfg, spec, batch_slots=2, max_seq=32, page_size=8,
+                         num_pages=7)
+    assert cache.max_pages == 4
+    assert cache.used_pages == 0
+    assert 0 not in cache.free                    # trash page reserved
+
+    assert cache.grow(0, 9)                       # 2 pages
+    assert cache.used_pages == 2
+    assert cache.owned[0] == list(cache.table[0, :2])
+    assert np.all(cache.table[0, 2:] == 0)
+    assert cache.grow(0, 9)                       # idempotent
+    assert cache.used_pages == 2
+
+    assert cache.grow(1, 32)                      # 4 pages
+    assert cache.used_pages == 6
+    assert not cache.grow(0, 32)                  # pool is dry...
+    assert cache.used_pages == 6                  # ...and refusal is a no-op
+    cache.release(1)
+    assert cache.used_pages == 2
+    assert np.all(cache.table[1] == 0)
+    assert cache.grow(0, 32)                      # now it fits
+
+    with pytest.raises(AssertionError):
+        PagedKVCache(cfg, spec, batch_slots=1, max_seq=32, page_size=8,
+                     num_pages=3)                 # can't hold one request
+
+
+def test_int8_pool_is_quarter_size(setup):
+    cfg, model, params = setup
+    fp = PagedKVCache(cfg, KVCacheSpec.all_fp(cfg.n_layers), 2, 32)
+    i8 = PagedKVCache(cfg, derive_kv_spec(model, params), 2, 32)
+    assert i8.hbm_bytes() * 4 == fp.hbm_bytes()   # f32 → int8

@@ -1,4 +1,11 @@
-"""Serving engine: batched generation, determinism, quantized path."""
+"""Serving subsystem: continuous batching, scheduler, sampling, metrics.
+
+The load-bearing property throughout: a request's generated tokens are
+**bit-identical** whether it is served alone or packed into a busy
+continuous-batching queue (greedy), because per-slot prefill chunks and
+per-row decode masks make each row's math independent of its batchmates,
+and sampling keys depend only on (seed, request_id, token index).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +14,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import get_model
 from repro.quant.quantizer import QuantSpec
-from repro.serve import Request, ServingEngine
+from repro.serve import Request, ServingEngine, derive_kv_spec
 
 
 @pytest.fixture(scope="module")
@@ -16,6 +23,18 @@ def setup():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def int8_spec(setup):
+    cfg, model, params = setup
+    return derive_kv_spec(model, params)
+
+
+def _solo(model, params, req: Request, max_seq=32, **kw):
+    eng = ServingEngine(model, params, batch_slots=1, max_seq=max_seq, **kw)
+    return eng.generate([Request(prompt=req.prompt,
+                                 max_new_tokens=req.max_new_tokens)])[0]
 
 
 def test_batched_generation(setup):
@@ -42,11 +61,136 @@ def test_generation_deterministic_greedy(setup):
     assert outs[0] == outs[1]
 
 
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+def test_continuous_batching_equals_solo(setup, int8_spec, kv):
+    """Queue deeper than the slot count, mixed lengths, requests arriving
+    mid-stream: every request's greedy tokens must be bit-identical to
+    serving it alone — for the fp cache AND the int8 cache (both sides of
+    the comparison see the same storage roundtrip)."""
+    cfg, model, params = setup
+    spec = int8_spec if kv == "int8" else "fp"
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab,
+                                        size=(int(n),)).astype(np.int32),
+                    max_new_tokens=int(m))
+            for n, m in [(9, 4), (3, 6), (5, 3), (2, 5), (7, 4), (4, 2)]]
+
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=32,
+                        kv_cache=spec)
+    handles = [eng.submit(r) for r in reqs[:4]]
+    for _ in range(3):
+        eng.step()                       # mid-stream...
+    handles += [eng.submit(r) for r in reqs[4:]]   # ...late arrivals
+    eng.run()
+    outs = [eng.scheduler.outputs[h] for h in handles]
+
+    for i, r in enumerate(reqs):
+        assert len(outs[i]) == r.max_new_tokens
+        solo = _solo(model, params, r, kv_cache=spec)
+        assert outs[i] == solo, f"request {i} diverged from solo serving"
+
+
+def test_per_request_termination_and_slot_reuse(setup):
+    """More requests than slots with different max_new_tokens: each stops
+    at its own limit (no batch-global max), finished slots are reused,
+    and FIFO admission starves nobody."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(5)
+    lens = [2, 9, 3, 7, 1, 5]
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(4,)),
+                    max_new_tokens=m) for m in lens]
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=32)
+    outs = eng.generate(reqs)
+    assert [len(o) for o in outs] == lens
+    # 6 admissions through 2 slots → slots were freed and reused
+    assert eng.scheduler._admit_counter == 6
+    assert not eng.scheduler.has_work()
+    # pages all returned to the pool
+    assert eng.cache.used_pages == 0
+
+
+def test_eos_stops_request(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=(5,))
+    base = ServingEngine(model, params, batch_slots=1, max_seq=32).generate(
+        [Request(prompt=prompt, max_new_tokens=8)])[0]
+    eos = base[2]
+    expect = base[:base.index(eos) + 1]
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=32)
+    outs = eng.generate([Request(prompt=prompt, max_new_tokens=8,
+                                 eos_id=eos),
+                         Request(prompt=prompt, max_new_tokens=8)])
+    assert outs[0] == expect             # stopped at EOS (EOS included)
+    assert outs[1] == base               # unaffected batchmate
+
+
+def test_sampling_vectorized_deterministic(setup):
+    """Temperature sampling is per-request deterministic under a fixed
+    seed regardless of batch composition: the key folds (seed,
+    request_id, token index) — nothing about the batch."""
+    cfg, model, params = setup
+    mk = lambda: Request(prompt=np.asarray([5, 9, 2]), max_new_tokens=6,
+                         temperature=50.0, request_id=99)
+    other = lambda: Request(prompt=np.asarray([1, 2, 3, 4]),
+                            max_new_tokens=9, temperature=30.0)
+    packed = ServingEngine(model, params, batch_slots=3, max_seq=32,
+                           seed=7).generate([other(), mk(), other()])
+    alone = ServingEngine(model, params, batch_slots=1, max_seq=32,
+                          seed=7).generate([mk()])
+    assert packed[1] == alone[0]
+    assert len(set(alone[0])) > 1, "temperature high enough that keys matter"
+    # a different engine seed draws a different stream
+    reseed = ServingEngine(model, params, batch_slots=1, max_seq=32,
+                           seed=8).generate([mk()])
+    assert reseed[0] != alone[0]
+
+
+def test_preemption_requeues_and_completes(setup):
+    """A page pool too small for both requests forces the scheduler to
+    preempt the newest one; it must be replayed and still complete."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(11)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(6,)),
+                    max_new_tokens=10) for _ in range(2)]
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=24,
+                        page_size=4, num_pages=7)
+    outs = eng.generate(reqs)
+    assert eng.metrics.preemptions >= 1
+    assert all(len(o) == 10 for o in outs)
+
+
+def test_metrics_sanity(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(13)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(4,)),
+                    max_new_tokens=m) for m in (3, 6, 4)]
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=32)
+    outs = eng.generate(reqs)
+    m = eng.metrics.summary()
+    assert m["requests"] == 3
+    assert m["total_tokens"] == sum(len(o) for o in outs) == 13
+    assert m["prefill_chunks"] >= 3
+    assert m["tokens_per_s"] > 0
+    assert 0 < m["slot_occupancy"] <= 1
+    ttfts = [r.ttft for r in eng.metrics.requests.values()]
+    assert all(t is not None and t >= 0 for t in ttfts)
+    assert m["mean_token_latency_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# static fallback path (unpageable families) + left-pad masking regression
+# ---------------------------------------------------------------------------
+
 def test_padded_batch_matches_solo(setup):
-    """Pad-masking regression: a short prompt left-padded into a batch
-    must compute exactly what it computes served alone.  Without the
-    ``valid_from`` masking the pad tokens decoded into the KV cache are
-    attended (and RoPE positions are shifted), corrupting the logits."""
+    """Pad-masking regression (static path): a short prompt left-padded
+    into a batch must compute exactly what it computes served alone.
+    Without ``valid_from`` the pad tokens decoded into the KV cache are
+    attended (and RoPE positions shifted), corrupting the logits."""
     cfg, model, params = setup
     rng = np.random.default_rng(3)
     long_p = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
@@ -73,26 +217,74 @@ def test_padded_batch_matches_solo(setup):
     buggy = prefill(toks, None, 2)
     assert np.abs(buggy[1] - solo[0]).max() > 1e-3
 
-    # end-to-end: batched mixed-length generation == solo generation
-    eng = ServingEngine(model, params, batch_slots=2, max_seq=32)
+    # end-to-end on the static engine: batched mixed-length == solo
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=32,
+                        mode="static")
     outs = eng.generate([Request(prompt=long_p, max_new_tokens=4),
                          Request(prompt=short_p, max_new_tokens=4)])
-    solo_short = ServingEngine(model, params, batch_slots=1, max_seq=32
-                               ).generate([Request(prompt=short_p,
-                                                   max_new_tokens=4)])[0]
+    solo_short = ServingEngine(model, params, batch_slots=1, max_seq=32,
+                               mode="static").generate(
+        [Request(prompt=short_p, max_new_tokens=4)])[0]
     assert outs[1] == solo_short
+
+
+def test_static_mode_matches_paged_greedy(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab, size=(6,))
+    o_s = ServingEngine(model, params, batch_slots=1, max_seq=32,
+                        mode="static").generate(
+        [Request(prompt=prompt, max_new_tokens=8)])[0]
+    o_p = ServingEngine(model, params, batch_slots=1, max_seq=32).generate(
+        [Request(prompt=prompt, max_new_tokens=8)])[0]
+    assert o_s == o_p
+
+
+def test_static_mode_eos_and_per_slot_stop(setup):
+    """Static path also honors eos_id / per-request max_new_tokens: a
+    finished row stops accumulating and the loop exits early when every
+    row is done."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(19)
+    prompt = rng.integers(0, cfg.vocab, size=(5,))
+    base = ServingEngine(model, params, batch_slots=1, max_seq=32,
+                         mode="static").generate(
+        [Request(prompt=prompt, max_new_tokens=6)])[0]
+    eos = base[1]
+    eng = ServingEngine(model, params, batch_slots=2, max_seq=32,
+                        mode="static")
+    outs = eng.generate([Request(prompt=prompt, max_new_tokens=6,
+                                 eos_id=eos),
+                         Request(prompt=prompt, max_new_tokens=3)])
+    assert outs[0] == base[:base.index(eos) + 1]
+    assert outs[1] == base[:3]
+
+
+def test_static_mode_rejects_overlong_requests(setup):
+    """Static mode must refuse prompt+max_new_tokens > max_seq like the
+    scheduler does — dynamic_update_slice would silently clamp the cache
+    write and corrupt the output."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, batch_slots=1, max_seq=16,
+                        mode="static")
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.generate([Request(prompt=np.arange(10), max_new_tokens=10)])
 
 
 def test_mixed_length_rejected_for_unmaskable_families():
     """SSM/hybrid state updates and sliding-window rolling caches cannot
     mask pad tokens retroactively — mixed-length batches must be refused,
-    not silently served with corrupted shorter prompts."""
+    not silently served with corrupted shorter prompts.  These families
+    auto-select the static path; requesting paged mode raises."""
     cfg = get_config("mamba2-780m", reduced=True)
     model = get_model(cfg)
     eng = ServingEngine(model, None, batch_slots=2, max_seq=32)
+    assert eng.mode == "static"
     with pytest.raises(NotImplementedError, match="mixed-length"):
         eng.generate([Request(prompt=np.arange(5), max_new_tokens=1),
                       Request(prompt=np.arange(2), max_new_tokens=1)])
+    with pytest.raises(NotImplementedError, match="full-context"):
+        ServingEngine(model, None, batch_slots=2, max_seq=32, mode="paged")
 
 
 def test_quantized_serving_close_to_fp(setup):
