@@ -1,5 +1,6 @@
 """Serving throughput: continuous batching + paged KV cache vs the
-static-batch engine, fp vs SIRA-derived int8 cache.
+static-batch engine, fp vs SIRA-derived int8 cache, plus speculative
+decoding on repetitive prompts.
 
 For each batch-slot count: serve a queue of mixed-length requests
 (deeper than the slot count) through
@@ -11,6 +12,15 @@ For each batch-slot count: serve a queue of mixed-length requests
                      precision paged cache;
   * ``paged-int8`` — same scheduler, int8 paged cache with per-layer/
                      per-head scales from SIRA range analysis.
+
+Then the ``spec`` pair: a queue of *repetitive* prompts (where prompt-
+lookup drafting accepts) through the int8 cache with and without the
+n-gram drafter — same tokens, fewer jitted decode steps:
+
+  * ``paged-int8-rep``  — per-token decode on the repetitive queue;
+  * ``paged-int8-spec`` — ``spec_decode="ngram"``; records acceptance
+                          rate, tokens/decode-step and the tokens/s
+                          speedup over the per-token row.
 
 Records tokens/s, mean TTFT (paged modes), slot occupancy, KV HBM bytes,
 and the paged-over-static speedup.
@@ -37,6 +47,20 @@ def make_requests(cfg, n: int, seed: int = 0):
             for _ in range(n)]
 
 
+def make_repetitive_requests(cfg, n: int, seed: int = 0):
+    """Prompts that repeat a short pattern — the regime where prompt-
+    lookup speculative decoding accepts (summaries, code edits, RAG)."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        pat = rng.integers(0, cfg.vocab, size=(int(rng.integers(3, 6)),))
+        reqs.append(Request(prompt=np.tile(pat, int(rng.integers(2, 4))),
+                            max_new_tokens=int(rng.integers(12, 25))))
+    return reqs
+
+
 def bench_static(model, params, reqs, slots: int, max_seq: int) -> dict:
     from repro.serve import Request, ServingEngine
 
@@ -56,13 +80,15 @@ def bench_static(model, params, reqs, slots: int, max_seq: int) -> dict:
 
 
 def bench_paged(model, params, reqs, slots: int, max_seq: int,
-                kv_cache, label: str) -> dict:
+                kv_cache, label: str, spec_decode=None,
+                spec_k: int = 4) -> dict:
     from repro.serve import Request, ServingEngine
 
     eng = ServingEngine(model, params, batch_slots=slots, max_seq=max_seq,
-                        kv_cache=kv_cache)
-    eng.generate([Request(prompt=np.asarray([1, 2, 3]),
-                          max_new_tokens=2)])          # jit warm-up
+                        kv_cache=kv_cache, spec_decode=spec_decode,
+                        spec_k=spec_k)
+    eng.generate([Request(prompt=np.asarray([1, 2, 3, 1, 2, 3]),
+                          max_new_tokens=4)])          # jit warm-up
     eng.reset_metrics()
     t0 = time.perf_counter()
     outs = eng.generate(reqs)
@@ -73,7 +99,10 @@ def bench_paged(model, params, reqs, slots: int, max_seq: int,
                 tokens_per_s=toks / dt, mean_ttft_s=m["mean_ttft_s"],
                 slot_occupancy=m["slot_occupancy"],
                 kv_hbm_bytes=eng.cache.hbm_bytes(),
-                int8_layers=eng.kv_spec.n_int8)
+                int8_layers=eng.kv_spec.n_int8,
+                decode_steps=m["decode_steps"],
+                acceptance_rate=m["acceptance_rate"],
+                tokens_per_decode_step=m["tokens_per_decode_step"])
 
 
 def main() -> None:
@@ -99,6 +128,10 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
     spec8 = derive_kv_spec(model, params)
 
+    def _denan(row):
+        return {k: (None if isinstance(v, float) and v != v else v)
+                for k, v in row.items()}
+
     results = []
     for slots in args.slots:
         reqs = make_requests(cfg, args.requests)
@@ -116,7 +149,7 @@ def main() -> None:
         for r in rows:
             r.update(batch_slots=slots, requests=args.requests,
                      speedup_vs_static=r["tokens_per_s"] / static_tps)
-            results.append(r)
+            results.append(_denan(r))
             ttft = (f"ttft={r['mean_ttft_s'] * 1e3:7.1f}ms"
                     if r["mean_ttft_s"] is not None else "ttft=      n/a")
             occ = (f"occ={r['slot_occupancy']:.2f}"
@@ -125,6 +158,31 @@ def main() -> None:
                   f"{r['tokens_per_s']:7.1f} tok/s "
                   f"({r['speedup_vs_static']:4.1f}x static) {ttft} {occ}",
                   flush=True)
+
+        # spec pair: same repetitive queue, per-token vs n-gram drafter
+        rep = bench_paged(model, params,
+                          make_repetitive_requests(cfg, args.requests),
+                          slots, args.max_seq, spec8, "paged-int8-rep")
+        spec = bench_paged(model, params,
+                           make_repetitive_requests(cfg, args.requests),
+                           slots, args.max_seq, spec8, "paged-int8-spec",
+                           spec_decode="ngram", spec_k=4)
+        assert spec["tokens"] == rep["tokens"], \
+            "speculative decoding changed the emitted tokens"
+        for r in (rep, spec):
+            r.update(batch_slots=slots, requests=args.requests,
+                     speedup_vs_static=None,
+                     speedup_vs_per_token=r["tokens_per_s"]
+                     / rep["tokens_per_s"])
+            results.append(_denan(r))
+            acc = (f"accept={r['acceptance_rate']:.2f}"
+                   if r["acceptance_rate"] == r["acceptance_rate"]
+                   else "accept= n/a")
+            print(f"slots={slots} {r['engine']:15s} "
+                  f"{r['tokens_per_s']:7.1f} tok/s "
+                  f"({r['speedup_vs_per_token']:4.1f}x per-token) {acc} "
+                  f"tok/step={r['tokens_per_decode_step']:.2f} "
+                  f"decode_steps={r['decode_steps']}", flush=True)
 
     payload = dict(backend=jax.default_backend(),
                    arch=cfg.name, requests=args.requests,

@@ -274,7 +274,7 @@ def f22_accumulators() -> List[Row]:
 def f23_crossover() -> List[Row]:
     """Crossover analysis (Fig 23): thresholding vs composite as channels
     and PE scale."""
-    from repro.core.costmodel import select_tail_style, tail_cost
+    from repro.core.costmodel import select_tail_style
     rows: List[Row] = []
     for C in (64, 256, 1024):
         for pe in (1, 4, 16):

@@ -6,7 +6,6 @@ by the SiraModel pass pipeline.
 """
 import argparse
 
-import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.core import (MinimizeAccumulators, SiraModel, Streamline,

@@ -1,0 +1,273 @@
+#!/usr/bin/env python
+"""CI perf-regression gate: compare freshly emitted benchmark artifacts
+(BENCH_backend.json / BENCH_serving.json) against the committed baselines
+in ``benchmarks/baselines/`` with per-metric tolerances.
+
+Metric classes (see ``RULES``):
+
+* ``exact``  — plan/node/token counts, pool sizes: any drift fails (a
+  changed lowering plan or changed greedy tokens is a correctness event,
+  not noise — re-baseline deliberately);
+* ``timing`` — absolute CPU timings (lower is better): fail when the
+  fresh value is more than ``--timing-tol`` above baseline; faster is
+  always fine (a big improvement prints a re-baseline hint);
+* ``ratio``  — derived ratios (speedups, occupancy, acceptance; higher
+  is better): fail when below baseline by more than ``--ratio-tol``,
+  with optional hard floors (compiled must never lose to the
+  interpreter: ``speedup >= 1.0``).
+
+Failures print a metric-by-metric diff table (also appended to
+``$GITHUB_STEP_SUMMARY`` when set, so the regression is readable from
+the job page without scrolling logs).
+
+    python scripts/check_bench.py                      # gate (CI / tier1)
+    python scripts/check_bench.py --update             # re-baseline
+    python scripts/check_bench.py --fresh-dir . --baseline-dir benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+# metric -> (class, hard_floor)
+# class: exact | timing | throughput | ratio — timing/throughput are
+# absolute measurements (machine-load-sensitive, gated at --timing-tol);
+# ratio metrics divide out load and get the tighter --ratio-tol
+RULES = {
+    "BENCH_backend.json": {
+        "key": ("workload",),
+        "context": ("batch", "repeat"),          # must match to compare
+        "metrics": {
+            "nodes": ("exact", None),
+            "plan": ("exact", None),
+            "interpreter_us_per_sample": ("timing", None),
+            "compiled_us_per_sample": ("timing", None),
+            "speedup": ("ratio", 1.0),
+        },
+    },
+    "BENCH_serving.json": {
+        "key": ("engine", "batch_slots"),
+        "context": ("arch", "requests", "int8_layers"),
+        "metrics": {
+            "tokens": ("exact", None),
+            "int8_layers": ("exact", None),
+            "kv_hbm_bytes": ("exact", None),
+            "decode_steps": ("exact", None),
+            "tokens_per_s": ("throughput", None),
+            "seconds": ("timing", None),
+            "mean_ttft_s": ("timing", None),
+            "slot_occupancy": ("ratio", None),
+            "speedup_vs_static": ("ratio", None),
+            "speedup_vs_per_token": ("ratio", None),
+            "acceptance_rate": ("ratio", None),
+            "tokens_per_decode_step": ("ratio", None),
+        },
+    },
+}
+
+
+class Row:
+    """One comparison outcome for the diff table."""
+
+    def __init__(self, where: str, metric: str, base, fresh,
+                 verdict: str, note: str = ""):
+        self.where, self.metric = where, metric
+        self.base, self.fresh = base, fresh
+        self.verdict, self.note = verdict, note
+
+    @property
+    def failed(self) -> bool:
+        return self.verdict == "FAIL"
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if isinstance(v, dict):
+        return json.dumps(v, sort_keys=True)
+    return str(v)
+
+
+def _compare_metric(where: str, metric: str, kind: str,
+                    floor: Optional[float], base, fresh,
+                    timing_tol: float, ratio_tol: float) -> Row:
+    if base is None and fresh is None:
+        return Row(where, metric, base, fresh, "ok")
+    if base is None or fresh is None:
+        return Row(where, metric, base, fresh, "FAIL",
+                   "present on one side only")
+    if kind == "exact":
+        if base == fresh:
+            return Row(where, metric, base, fresh, "ok")
+        return Row(where, metric, base, fresh, "FAIL", "exact mismatch")
+    base_f, fresh_f = float(base), float(fresh)
+    if kind == "timing":                       # lower is better
+        limit = base_f * (1.0 + timing_tol)
+        if fresh_f > limit:
+            return Row(where, metric, base, fresh, "FAIL",
+                       f"slower than baseline +{timing_tol:.0%}")
+        if fresh_f < base_f * (1.0 - timing_tol):
+            return Row(where, metric, base, fresh, "ok",
+                       "much faster — consider --update")
+        return Row(where, metric, base, fresh, "ok")
+    if kind == "throughput":                   # higher better, absolute:
+        #                                        load-sensitive like timing
+        limit = base_f / (1.0 + timing_tol)
+        if fresh_f < limit:
+            return Row(where, metric, base, fresh, "FAIL",
+                       f"throughput below baseline/{1 + timing_tol:g}")
+        if fresh_f > base_f * (1.0 + timing_tol):
+            return Row(where, metric, base, fresh, "ok",
+                       "much faster — consider --update")
+        return Row(where, metric, base, fresh, "ok")
+    if kind == "ratio":                        # higher is better
+        if floor is not None and fresh_f < floor:
+            return Row(where, metric, base, fresh, "FAIL",
+                       f"below hard floor {floor:g}")
+        limit = base_f * (1.0 - ratio_tol)
+        if fresh_f < limit:
+            return Row(where, metric, base, fresh, "FAIL",
+                       f"below baseline -{ratio_tol:.0%}")
+        if fresh_f > base_f * (1.0 + ratio_tol):
+            return Row(where, metric, base, fresh, "ok",
+                       "much better — consider --update")
+        return Row(where, metric, base, fresh, "ok")
+    raise ValueError(kind)
+
+
+def check_file(name: str, fresh_path: Path, base_path: Path,
+               timing_tol: float, ratio_tol: float) -> List[Row]:
+    rules = RULES[name]
+    rows: List[Row] = []
+    if not fresh_path.exists():
+        return [Row(name, "<file>", "committed", "missing", "FAIL",
+                    "fresh artifact was not emitted")]
+    fresh = json.loads(fresh_path.read_text())
+    base = json.loads(base_path.read_text())
+
+    for field in rules["context"]:
+        if base.get(field) != fresh.get(field):
+            rows.append(Row(name, field, base.get(field), fresh.get(field),
+                            "FAIL", "bench configuration drifted — "
+                            "re-baseline with --update"))
+    if any(r.failed for r in rows):
+        return rows                       # timings aren't comparable
+
+    def key_of(row) -> Tuple:
+        return tuple(row.get(k) for k in rules["key"])
+
+    base_rows = {key_of(r): r for r in base["results"]}
+    fresh_rows = {key_of(r): r for r in fresh["results"]}
+    for k in base_rows.keys() | fresh_rows.keys():
+        where = f"{name}:{'/'.join(str(p) for p in k)}"
+        b, f = base_rows.get(k), fresh_rows.get(k)
+        if b is None or f is None:
+            rows.append(Row(where, "<row>",
+                            "present" if b else "absent",
+                            "present" if f else "absent", "FAIL",
+                            "result row added/removed — re-baseline"))
+            continue
+        for metric, (kind, floor) in rules["metrics"].items():
+            if metric not in b and metric not in f:
+                continue                  # metric not produced by this row
+            rows.append(_compare_metric(
+                where, metric, kind, floor, b.get(metric), f.get(metric),
+                timing_tol, ratio_tol))
+    return rows
+
+
+def render_table(rows: List[Row], markdown: bool) -> str:
+    headers = ("where", "metric", "baseline", "fresh", "verdict", "note")
+    cells = [(r.where, r.metric, _fmt(r.base), _fmt(r.fresh),
+              r.verdict, r.note) for r in rows]
+    if markdown:
+        out = ["| " + " | ".join(headers) + " |",
+               "|" + "|".join("---" for _ in headers) + "|"]
+        out += ["| " + " | ".join(c) + " |" for c in cells]
+        return "\n".join(out)
+    widths = [max(len(h), *(len(c[i]) for c in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    out = [line, "-" * len(line)]
+    out += ["  ".join(c.ljust(w) for c, w in zip(cell, widths))
+            for cell in cells]
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", default=".",
+                    help="where the freshly emitted BENCH_*.json live")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--timing-tol", type=float, default=1.5,
+                    help="allowed relative slowdown on absolute CPU "
+                         "timings (default 1.5 — absolute timings swing "
+                         "~2x with machine load; they only catch order-"
+                         "of-magnitude regressions, the ratio metrics "
+                         "and exact plan/count checks do the real work)")
+    ap.add_argument("--ratio-tol", type=float, default=0.5,
+                    help="allowed relative drop on speedup/occupancy/"
+                         "acceptance ratios (default 0.5; ratios divide "
+                         "out machine load but CPU jitter remains)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh artifacts over the baselines "
+                         "(deliberate re-baseline; commit the result)")
+    ap.add_argument("--only", choices=sorted(RULES), action="append",
+                    help="check a subset of artifacts")
+    args = ap.parse_args(argv)
+
+    fresh_dir, base_dir = Path(args.fresh_dir), Path(args.baseline_dir)
+    names = args.only or sorted(RULES)
+
+    if args.update:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        for name in names:
+            src = fresh_dir / name
+            if not src.exists():
+                print(f"cannot re-baseline {name}: {src} missing")
+                return 2
+            shutil.copy(src, base_dir / name)
+            print(f"re-baselined {base_dir / name}")
+        return 0
+
+    all_rows: List[Row] = []
+    for name in names:
+        base_path = base_dir / name
+        if not base_path.exists():
+            print(f"no baseline for {name} ({base_path} missing) — run "
+                  f"scripts/check_bench.py --update and commit it")
+            return 2
+        all_rows += check_file(name, fresh_dir / name, base_path,
+                               args.timing_tol, args.ratio_tol)
+
+    failures = [r for r in all_rows if r.failed]
+    shown = failures if failures else \
+        [r for r in all_rows if r.note] or all_rows
+    print(render_table(shown, markdown=False))
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write("## Benchmark regression gate: "
+                     + ("FAILED\n\n" if failures else "passed\n\n"))
+            fh.write(render_table(shown, markdown=True) + "\n")
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed beyond tolerance "
+              f"(timing ±{args.timing_tol:.0%}, ratio -{args.ratio_tol:.0%})."
+              f"  Intentional?  Re-baseline with:\n"
+              f"  python scripts/check_bench.py --update   # then commit "
+              f"{base_dir}/*.json")
+        return 1
+    print(f"\nbenchmark gate passed ({len(all_rows)} metrics across "
+          f"{len(names)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 """zamba2-2.7b [hybrid]: 54L Mamba2 backbone + shared attention blocks
 (arXiv:2411.15242).  54L d_model=2560 32H(kv=32) d_ff=10240 vocab=32000,
 ssm_state=64."""
-from .base import ArchConfig, MoEConfig, SSMConfig, register
+from .base import ArchConfig, SSMConfig, register
 
 CONFIG = register(
     ArchConfig(

@@ -9,7 +9,6 @@ hardware-adaptation analysis in DESIGN.md §2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from .ops import COST_REGISTRY, register_op
 

@@ -720,15 +720,18 @@ class CompiledSiraModel:
 
     def _forward(self, feeds: Dict[str, jnp.ndarray]
                  ) -> Dict[str, jnp.ndarray]:
-        env: Env = dict(feeds)
+        # the dtype cast happens *inside* the jitted program: an eager
+        # per-call jnp.asarray(v, dtype) costs more host time than the
+        # whole XLA executable on small graphs (the TFC-w2a2 regression —
+        # tiny all-dense graphs are dispatch-bound, so every eager device
+        # op in the call path shows up directly in us/sample)
+        env: Env = {k: v.astype(self.dtype) for k, v in feeds.items()}
         for run in self._steps:
             run(env)
         return {t: env[t] for t in self.outputs}
 
     def __call__(self, feeds: Dict[str, Any]) -> Dict[str, np.ndarray]:
-        jfeeds = {k: jnp.asarray(np.asarray(v), self.dtype)
-                  for k, v in feeds.items()}
-        out = self._jfn(jfeeds)
+        out = self._jfn({k: np.asarray(v) for k, v in feeds.items()})
         return {k: np.asarray(v) for k, v in out.items()}
 
     @property

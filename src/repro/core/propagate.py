@@ -20,14 +20,13 @@ transform; POISON marks ranges whose scale cannot be erased exactly
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from .graph import Graph, Node, quant_bounds, round_half_to_even
 from .intervals import (Array, ScaledIntRange, add_intervals, dot_interval,
-                        dyn_dot_interval, monotonic_fn_interval,
-                        mul_intervals)
+                        monotonic_fn_interval, mul_intervals)
 from .ops import PROP_REGISTRY, register_op  # noqa: F401  (re-exported)
 
 POISON = "!unerasable"

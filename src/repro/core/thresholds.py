@@ -23,7 +23,7 @@ which is exact for signed/unsigned and narrow/wide ranges alike.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import (SHAPES, ArchConfig, cell_applicable, get_config,
+from repro.configs import (SHAPES, cell_applicable, get_config,
                            input_specs, list_archs)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shardings import (batch_pspec, filter_pspec_for_mesh,
@@ -38,8 +38,7 @@ from repro.launch.shardings import (batch_pspec, filter_pspec_for_mesh,
 from repro.models import get_model
 from repro.optim.adamw import AdamW, AdamWState
 from repro.quant.quantizer import QuantSpec
-from repro.roofline.analysis import (model_flops_for, parse_collectives,
-                                     roofline_from)
+from repro.roofline.analysis import model_flops_for, roofline_from
 from repro.roofline.hlo_cost import analyze_hlo, normalize_cost_analysis
 from repro.train.train_step import TrainState, init_train_state, \
     make_train_step

@@ -21,7 +21,7 @@ per chip.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

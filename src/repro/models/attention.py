@@ -10,8 +10,7 @@ lets the 32k-prefill cells fit (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -230,8 +229,13 @@ def paged_attention(params, x, k_pages, v_pages, page_table, lengths, *,
                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Multi-token attention against a paged KV cache.
 
-    One function covers both serving phases: chunked prefill is a call
-    with B=1, T=chunk; batched decode is B=slots, T=1.
+    One function covers all three serving phases: chunked prefill is a
+    call with B=1, T=chunk; batched decode is B=slots, T=1; speculative
+    verification is B=slots, T=spec_k+1 — each slot's draft window sits
+    at its own offset ``lengths[b]``, and the position mask makes token t
+    attend exactly to the cache plus the drafts before it, so
+    ``logits[:, t]`` equals what t sequential single-token calls would
+    produce.
 
       x          (B, T, d)    chunk of new tokens per slot
       k_pages    (P, page_size, KV, hd)   shared physical page pool
@@ -247,6 +251,13 @@ def paged_attention(params, x, k_pages, v_pages, page_table, lengths, *,
     falls out of the position mask).  Dequantization happens here, folded
     into the query scaling (K) and the PV output (V), per KV head.
     Returns (y, k_pages, v_pages).
+
+    Scatter-before-gather is also the speculative-rollback contract: a
+    rejected draft's K/V stay in the pool as garbage past the slot's
+    committed length, unreadable (every mask is position <= query, and
+    queries never precede the length pointer) until the next call's
+    scatter overwrites them — rolling back is just not advancing the
+    pointer (``serve/kv_cache.py rollback``).
     """
     B, T, _ = x.shape
     n_pages = page_table.shape[1]

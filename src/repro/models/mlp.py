@@ -1,7 +1,7 @@
 """Gated MLP (SwiGLU / GeGLU) with QAT hooks."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

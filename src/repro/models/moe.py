@@ -11,12 +11,12 @@ Aux losses: Switch load-balance + router z-loss.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .common import BATCH, MODEL, dense_init, linear, shard
+from .common import BATCH, MODEL, dense_init, shard
 from .mlp import apply_mlp, init_mlp
 
 

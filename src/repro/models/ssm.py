@@ -13,7 +13,7 @@ d_in/H channels with state N; gated RMSNorm; out_proj.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

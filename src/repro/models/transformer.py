@@ -16,8 +16,7 @@ frontend embedding stub prepended per the assignment).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from .attention import (attention_decode, attention_prefill, init_attention,
                         init_kv_cache, paged_attention)
-from .common import (BATCH, MODEL, dense_init, embed_init, linear, rms_norm,
+from .common import (BATCH, MODEL, dense_init, embed_init, rms_norm,
                      shard, softcap)
 from .mlp import apply_mlp, init_mlp
 from .moe import apply_moe, init_moe
@@ -397,8 +396,10 @@ class Model:
         """Multi-token step against a paged KV cache (serving path).
 
         tokens (B, T) → (logits (B, T, V), new kv_pages).  Covers chunked
-        prefill (B=1, T=chunk) and batched continuous decode (B=slots,
-        T=1) with one code path — see ``attention.paged_attention``.
+        prefill (B=1, T=chunk), batched continuous decode (B=slots, T=1)
+        and speculative verification (B=slots, T=spec_k+1, each slot's
+        window at its own ``lengths[b]`` offset) with one code path —
+        see ``attention.paged_attention``.
 
         kv_pages: length-n_layers list of {"k": (P, page, KV, hd),
         "v": ...} page pools — a Python list (not a stacked scan axis) so

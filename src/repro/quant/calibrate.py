@@ -8,10 +8,9 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from .quantizer import QuantSpec, compute_scale
+from .quantizer import QuantSpec
 
 
 class MinMaxObserver:

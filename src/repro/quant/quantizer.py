@@ -8,8 +8,7 @@ straight-through-estimator (STE) fake quantization for QAT.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -135,8 +134,6 @@ def pack_weights_int8(params, min_size: int = 1 << 12):
     the deployed form of the paper's streamlined integer graph (weight-only
     W8): HBM weight traffic halves vs bf16 and the integer MatMul kernel
     consumes q directly.  Small tensors (norms, biases) stay float."""
-    import numpy as np
-
     PACKABLE = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
                 "in_proj", "out_proj", "lm_head")
 

@@ -17,9 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
-import numpy as np
 
 PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
 HBM_BW = 819e9             # bytes/s per chip

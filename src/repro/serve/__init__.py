@@ -8,8 +8,13 @@ cache.  Public API:
   preemption.
 * ``PagedKVCache`` / ``KVCacheSpec`` / ``derive_kv_spec`` — paged pool
   with per-layer int8 scales from SIRA range analysis (fp fallback).
-* ``ServingMetrics`` — TTFT, token latency, tokens/s, slot occupancy.
+* ``ServingMetrics`` — TTFT, token latency, tokens/s, slot occupancy,
+  speculative acceptance rate / tokens-per-step.
+* ``DraftProposer`` / ``NgramDrafter`` — draft proposers for speculative
+  decoding (``ServingEngine(spec_decode="ngram", spec_k=4)``).
 """
+from .draft import (DraftProposer, FixedDrafter,               # noqa: F401
+                    NgramDrafter, get_drafter)
 from .engine import ServingEngine                              # noqa: F401
 from .scheduler import Request, Scheduler                      # noqa: F401
 from .kv_cache import (PagedKVCache, KVCacheSpec, LayerKVSpec,  # noqa: F401

@@ -20,6 +20,17 @@ Sampling is vectorized (one ``jax.random.categorical`` over the batch via
 vmap, per-request temperature) and deterministic per request: the key is
 ``fold_in(fold_in(seed, request_id), token_index)``, so a request draws
 the same tokens whether it is served alone or packed with others.
+
+Speculative decoding (``spec_decode=``) amortizes the per-step dispatch
+cost of the decode loop: a pluggable drafter proposes up to ``spec_k``
+tokens per slot, one jitted ``decode_paged`` call over (slots, spec_k+1)
+verifies them all against the target model (the same multi-token path
+chunked prefill uses), accepted prefixes commit to the paged cache and
+rejected suffixes roll back via the per-slot length pointers — pages
+stay allocated, no pool churn.  Because sampling is a deterministic
+function of (seed, request_id, token index, logits), acceptance is exact
+at any temperature: the emitted stream is bit-identical to per-token
+decoding, speculation only changes how many jitted steps it takes.
 """
 from __future__ import annotations
 
@@ -32,6 +43,7 @@ import numpy as np
 from repro.models.transformer import Model
 from repro.quant.quantizer import QuantSpec
 
+from .draft import DraftProposer, get_drafter
 from .kv_cache import KVCacheSpec, PagedKVCache, derive_kv_spec
 from .metrics import ServingMetrics
 from .scheduler import Request, Scheduler
@@ -44,11 +56,16 @@ class ServingEngine:
                  kv_cache: Union[str, KVCacheSpec] = "fp",
                  page_size: int = 8, prefill_chunk: int = 8,
                  num_pages: Optional[int] = None,
-                 mode: Optional[str] = None):
+                 mode: Optional[str] = None,
+                 spec_decode: Union[str, DraftProposer, None] = None,
+                 spec_k: int = 4):
         """kv_cache: "fp" | "sira-int8" | a prebuilt KVCacheSpec.
         mode: None (auto), "paged", or "static" (the pre-scheduler
         fixed-batch engine, kept for unpageable families and as the
-        benchmark baseline)."""
+        benchmark baseline).
+        spec_decode: None (per-token decode), a drafter name ("ngram"),
+        or a DraftProposer — enables speculative decoding (paged mode
+        only).  spec_k: max draft tokens verified per decode step."""
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -68,6 +85,16 @@ class ServingEngine:
                 "static mode serves a full-precision cache — a quantized "
                 "kv_cache would be silently ignored")
         self.mode = mode
+        if spec_decode is not None and mode != "paged":
+            raise NotImplementedError(
+                "speculative decoding requires paged mode (the static "
+                "engine has no per-slot length pointers to roll back)")
+        if spec_k < 1:
+            raise ValueError("spec_k must be >= 1")
+        self.drafter: Optional[DraftProposer] = (
+            get_drafter(spec_decode) if isinstance(spec_decode, str)
+            else spec_decode)
+        self.spec_k = spec_k
 
         def sample(logits, temps, rids, steps):
             lg = logits.astype(jnp.float32)
@@ -128,7 +155,10 @@ class ServingEngine:
             return False
         for slot, entry in sched.admit():
             self._prefill(slot, entry)
-        self._decode_once()
+        if self.drafter is not None:
+            self._decode_spec()
+        else:
+            self._decode_once()
         return True
 
     def run(self) -> None:
@@ -175,20 +205,36 @@ class ServingEngine:
         if done:
             self.metrics.on_finish(handle)
 
-    def _decode_once(self) -> None:
+    def _grow_for_step(self, proposals=None) -> None:
+        """Map page capacity for this step's per-slot write window.
+
+        Every slot must map the write position ``length`` (per-token) or
+        the verify window ``[length, length + spec_k + 1)`` when it has
+        proposals.  A window that cannot be mapped drops its proposals
+        (``proposals[i]`` cleared in place) before anyone is preempted —
+        speculation never evicts a victim.  When even one token cannot
+        be mapped, the newest-admitted request is preempted (possibly
+        the needy slot itself)."""
         sched = self.scheduler
-        # every slot must map the write position `length`; growth may need
-        # a fresh page at page boundaries — preempt newest-admitted when
-        # the pool is dry (possibly the needy slot itself)
         for i in sorted(sched.active_slots(),
                         key=lambda i: sched.slots[i].admit_seq):
             while True:
                 st = sched.slots[i]
                 if st is None:          # lost its slot as preemption victim
                     break
+                props = proposals.get(i) if proposals else None
+                if props and self.cache.reserve(
+                        i, st.length + 1 + self.spec_k):
+                    break
+                if props:
+                    proposals[i] = []
                 if self.cache.grow(i, st.length + 1):
                     break
                 sched.preempt(sched.newest_active())
+
+    def _decode_once(self) -> None:
+        sched = self.scheduler
+        self._grow_for_step()
         active = sched.active_slots()
         if not active:
             return
@@ -212,7 +258,7 @@ class ServingEngine:
         nxt = np.asarray(self._sample_fn(
             logits[:, -1], jnp.asarray(temps), jnp.asarray(rids),
             jnp.asarray(steps)))
-        self.metrics.on_decode_step(len(active), B)
+        self.metrics.on_decode_step(len(active), B, tokens=len(active))
         for i in active:
             sched.note_cache_write(i)
             handle = sched.slots[i].entry.handle
@@ -220,6 +266,109 @@ class ServingEngine:
             self.metrics.on_token(handle)
             if done:
                 self.metrics.on_finish(handle)
+
+    # -------------------------------------------------- speculative decode
+    def _decode_spec(self) -> None:
+        """One speculative decode step: propose, verify in a single
+        jitted (slots, spec_k+1) call, commit accepted prefixes, roll
+        back rejected suffixes.
+
+        Per slot, the input row is ``[pending, d_1 .. d_m, pad]`` at
+        positions ``length .. length+spec_k``.  ``logits[:, t]`` predicts
+        the token after position ``length+t``, so draft ``d_{t+1}`` is
+        accepted iff it equals the token the engine would sample from
+        ``logits[:, t]`` at token index ``n_generated + t`` — the exact
+        per-token stream at any temperature.  The first mismatch yields
+        the corrected token; full acceptance yields a bonus token from
+        the last position.  Cache commits ``1 + accepted`` positions
+        (pending + accepted drafts); the rest is rolled back by leaving
+        the per-slot length pointer behind (pages stay allocated).
+
+        A slot whose drafter proposes nothing rides along with an all-pad
+        tail; when *no* slot has proposals the step degrades to the
+        per-token path (identical tokens, narrower jitted call).
+        """
+        sched = self.scheduler
+        k = self.spec_k
+        proposals = {}
+        for i in sched.active_slots():
+            e = sched.slots[i].entry
+            remaining = e.request.max_new_tokens - e.n_generated
+            want = min(k, remaining - 1)   # last token never needs a draft
+            props = (self.drafter.propose(e.seq, want, e.prng_id)
+                     if want > 0 else [])
+            proposals[i] = [int(t) for t in props][:want]
+        if not any(proposals.values()):
+            self._decode_once()            # PR 3 path, bit-identical
+            return
+
+        T = k + 1
+        self._grow_for_step(proposals)
+        active = sched.active_slots()
+        if not active:
+            return
+
+        B = self.B
+        toks = np.zeros((B, T), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i in active:
+            st = sched.slots[i]
+            row = [st.entry.seq[-1]] + proposals.get(i, [])
+            toks[i, :len(row)] = row
+            lens[i] = st.length
+        logits, pages = self._step_fn(
+            self.params, jnp.asarray(toks), self.cache.pages,
+            self.cache.device_table(), jnp.asarray(lens))
+        self.cache.pages = pages
+
+        # sample every verify position in one vectorized call: row (i, t)
+        # uses the same (seed, request_id, token index) key the per-token
+        # path would, so acceptance == equality with the exact stream.
+        # All B*T rows are sampled (idle slots discarded) so the jitted
+        # sampler sees one stable shape — per-active-count shapes would
+        # retrace on every queue-depth change and dwarf the verify call.
+        temps = np.zeros((B * T,), np.float32)
+        rids = np.zeros((B * T,), np.int32)
+        steps = np.zeros((B * T,), np.int32)
+        for i in active:
+            e = sched.slots[i].entry
+            temps[i * T:(i + 1) * T] = e.request.temperature
+            rids[i * T:(i + 1) * T] = e.prng_id
+            steps[i * T:(i + 1) * T] = e.n_generated + np.arange(T)
+        sampled = np.asarray(self._sample_fn(
+            logits.reshape(B * T, -1), jnp.asarray(temps),
+            jnp.asarray(rids), jnp.asarray(steps))).reshape(B, T)
+
+        emitted_total = proposed = accepted_total = 0
+        for i in active:
+            props = proposals.get(i, [])
+            exp = sampled[i]
+            a = 0
+            while a < len(props) and props[a] == int(exp[a]):
+                a += 1
+            # emit accepted drafts + the correction/bonus token;
+            # record_tokens stops at EOS / max_new_tokens inside the
+            # window (slot + pages freed there, tail discarded)
+            emitted = [int(t) for t in exp[:a + 1]]
+            handle = sched.slots[i].entry.handle
+            n_rec, done = sched.record_tokens(i, emitted)
+            for _ in range(n_rec):
+                self.metrics.on_token(handle)
+            emitted_total += n_rec
+            proposed += len(props)
+            # drafts accepted AND emitted — an EOS/max_new termination
+            # inside the window discards the tail, which must not count
+            # toward the acceptance rate
+            accepted_total += min(a, n_rec)
+            if done:
+                self.metrics.on_finish(handle)
+            else:
+                sched.advance(i, 1 + a)          # pending + accepted
+                self.cache.rollback(i, sched.slots[i].length)
+                self.drafter.observe(sched.slots[i].entry.seq,
+                                     sched.slots[i].entry.prng_id)
+        self.metrics.on_decode_step(len(active), B, tokens=emitted_total)
+        self.metrics.on_spec_step(proposed, accepted_total)
 
     # ---------------------------------------------------------- generate
     def generate(self, requests: List[Request]) -> List[List[int]]:

@@ -231,6 +231,27 @@ class PagedKVCache:
         self.owned[slot] = []
         self.table[slot, :] = 0
 
+    # ------------------------------------------------- speculative window
+    def reserve(self, slot: int, new_len: int) -> bool:
+        """Map capacity for a speculative write window: every logical
+        position < ``new_len`` addressable (``new_len`` may exceed what
+        ends up committed).  Pages acquired here stay owned by the slot
+        even when the window is rolled back — rejection causes no
+        free-list churn, the pages are reused by the very next step."""
+        return self.grow(slot, min(new_len, self.max_pages * self.page_size))
+
+    def rollback(self, slot: int, committed_len: int) -> None:
+        """Discard speculative writes beyond ``committed_len``.
+
+        Physically a no-op by construction: every read masks key
+        positions against the per-slot length pointer, so the rejected
+        suffix is unreadable garbage, and the next step's writes land on
+        top of it (scatter happens before gather inside
+        ``paged_attention``, so it is overwritten before it could ever
+        enter a live mask).  Pages stay allocated (see ``reserve``)."""
+        assert self.pages_for(committed_len) <= len(self.owned[slot]), \
+            "rollback below the slot's mapped extent"
+
     # ------------------------------------------------------------ views
     def device_table(self) -> jnp.ndarray:
         return jnp.asarray(self.table)

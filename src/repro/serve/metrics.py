@@ -46,10 +46,14 @@ class ServingMetrics:
         self.clock = clock
         self.requests: Dict[int, RequestRecord] = {}
         self.decode_steps = 0
+        self.decode_tokens = 0
         self.active_slot_steps = 0
         self.slot_capacity = 0
         self.prefill_chunks = 0
         self.preemptions = 0
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -75,10 +79,19 @@ class ServingMetrics:
     def on_finish(self, request_id: int) -> None:
         self.requests[request_id].finish_t = self.clock()
 
-    def on_decode_step(self, active_slots: int, total_slots: int) -> None:
+    def on_decode_step(self, active_slots: int, total_slots: int,
+                       tokens: int = 0) -> None:
         self.decode_steps += 1
+        self.decode_tokens += tokens
         self.active_slot_steps += active_slots
         self.slot_capacity += total_slots
+
+    def on_spec_step(self, proposed: int, accepted: int) -> None:
+        """One speculative decode step verified ``proposed`` draft tokens
+        across the batch and accepted ``accepted`` of them."""
+        self.spec_steps += 1
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
 
     def on_preemption(self, request_id: int) -> None:
         self.preemptions += 1
@@ -115,6 +128,24 @@ class ServingMetrics:
             return float("nan")
         return self.active_slot_steps / self.slot_capacity
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens across all speculative steps.
+        High acceptance (repetitive prompts) is where speculation pays;
+        near zero it degrades to the per-token path plus wasted verify
+        width — watch this before raising ``spec_k``."""
+        if not self.spec_proposed:
+            return float("nan")
+        return self.spec_accepted / self.spec_proposed
+
+    @property
+    def tokens_per_decode_step(self) -> float:
+        """Generated tokens emitted per jitted decode call, per active
+        slot (1.0 without speculation; up to 1 + spec_k with it)."""
+        if not self.active_slot_steps:
+            return float("nan")
+        return self.decode_tokens / self.active_slot_steps
+
     def summary(self) -> Dict[str, float]:
         return dict(
             requests=len(self.requests),
@@ -122,6 +153,11 @@ class ServingMetrics:
             decode_steps=self.decode_steps,
             prefill_chunks=self.prefill_chunks,
             preemptions=self.preemptions,
+            spec_steps=self.spec_steps,
+            spec_proposed=self.spec_proposed,
+            spec_accepted=self.spec_accepted,
+            acceptance_rate=self.acceptance_rate,
+            tokens_per_decode_step=self.tokens_per_decode_step,
             mean_ttft_s=self.mean_ttft,
             mean_token_latency_s=self.mean_token_latency,
             tokens_per_s=self.tokens_per_s,

@@ -132,11 +132,27 @@ class Scheduler:
     def set_prefilled(self, slot: int, length: int) -> None:
         self.slots[slot].length = length
 
+    def advance(self, slot: int, n: int) -> None:
+        """``n`` tokens were committed into the slot's KV cache this step
+        (1 on the per-token path; 1 + accepted drafts on a speculative
+        step — the rejected suffix never advances the pointer)."""
+        self.slots[slot].length += n
+
     def note_cache_write(self, slot: int) -> None:
         """One decode step wrote the slot's pending token into the cache."""
-        self.slots[slot].length += 1
+        self.advance(slot, 1)
 
     # ------------------------------------------------------ termination
+    def record_tokens(self, slot: int, tokens) -> Tuple[int, bool]:
+        """Append sampled tokens in order, honoring EOS / max_new_tokens
+        *inside the window*: recording stops at the terminating token
+        (the slot is freed, later tokens are discarded).  Returns
+        (n_recorded, finished)."""
+        for n, tok in enumerate(tokens):
+            if self.record_token(slot, int(tok)):
+                return n + 1, True
+        return len(tokens), False
+
     def record_token(self, slot: int, token: int) -> bool:
         """Append a sampled token; free the slot if the request finished
         (EOS hit or max_new_tokens reached).  Returns finished."""

@@ -23,9 +23,9 @@ driver express steps at roughly that wall-time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
-from .checkpoint import latest_checkpoint, restore_checkpoint, step_of
+from .checkpoint import latest_checkpoint, step_of
 
 
 @dataclasses.dataclass

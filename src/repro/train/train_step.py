@@ -8,7 +8,6 @@ activation memory by the microbatch count.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax

@@ -1,6 +1,5 @@
 """Validation of the trip-count-aware HLO cost parser: scanned graphs must
 match the unrolled graph's cost_analysis (which XLA counts correctly)."""
-import numpy as np
 import pytest
 
 

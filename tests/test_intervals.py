@@ -4,9 +4,9 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
-from repro.core.intervals import (ScaledIntRange, add_intervals,
-                                  dot_interval, dyn_dot_interval,
-                                  monotonic_fn_interval, mul_intervals)
+from repro.core.intervals import (ScaledIntRange, dot_interval,
+                                  dyn_dot_interval, monotonic_fn_interval,
+                                  mul_intervals)
 
 
 def test_point_range_integer_detection():

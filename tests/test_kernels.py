@@ -105,7 +105,7 @@ def test_quantize_sweep(qmin, qmax, dtype):
 
 def test_kernel_pipeline_matches_streamlined_graph():
     """int_matmul + multithreshold == the SIRA-streamlined graph tail."""
-    from repro.core import (Graph, ScaledIntRange, analyze,
+    from repro.core import (Graph, ScaledIntRange,
                             convert_tails_to_thresholds, streamline)
     rng = np.random.default_rng(3)
     K, M = 128, 128

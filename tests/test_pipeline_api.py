@@ -7,9 +7,8 @@ op registry, and the signed-input datatype-bound regression."""
 import numpy as np
 import pytest
 
-from repro.core import (AggregateScalesBiases, BuildConfig,
-                        ConvertTailsToThresholds, ExplicitizeQuantizers,
-                        Fixpoint, Graph, MinimizeAccumulators,
+from repro.core import (BuildConfig, ConvertTailsToThresholds,
+                        ExplicitizeQuantizers, Fixpoint, Graph,
                         RemoveIdentityOps, ScaledIntRange, SiraModel,
                         Streamline, VerifyRanges, analysis_calls, analyze,
                         build_flow, convert_tails_to_thresholds,

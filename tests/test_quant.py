@@ -7,8 +7,7 @@ pytest.importorskip("hypothesis")  # optional dep: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
 from repro.quant import (MinMaxObserver, PercentileObserver, QuantSpec,
-                         compute_scale, dequantize, fake_quant,
-                         fake_quant_dynamic, quantize_int)
+                         compute_scale, fake_quant, quantize_int)
 
 
 @pytest.mark.parametrize("granularity", ["per_tensor", "per_channel",

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import (analyze, convert_tails_to_thresholds,
-                        minimize_accumulators, streamline, summarize)
+                        minimize_accumulators, streamline)
 from repro.core.costmodel import (lut_composite_total, lut_threshold_total,
                                   select_tail_style, tail_cost,
                                   tpu_tail_bytes)
