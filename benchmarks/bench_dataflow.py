@@ -1,0 +1,109 @@
+"""Dataflow-accelerator DSE report over the four QNN workloads.
+
+For each workload: run the default build flow, then the DSE subsystem —
+SIRA-vs-datatype-baseline resource estimates (same topology and folding;
+only the widths/styles differ), the folding search toward a target FPS on
+the target device (plus a deliberately infeasible budget to exercise the
+binding-constraint reporting), and the max-throughput design point.
+
+Every number here is produced by deterministic analytical models, so the
+CI gate (``scripts/check_bench.py``) holds node counts, style choices and
+bitwidths **exactly** and the resource estimates to a tight band — this
+is the accelerator-level mirror of the paper's −LUTs/−DSPs/−accumulator
+claims.
+
+    PYTHONPATH=src python benchmarks/bench_dataflow.py \
+        [--device pynq-z1] [--target-fps 1000] [--out BENCH_dataflow.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def bench_workload(name: str, device: str, target_fps: float) -> dict:
+    from repro.core import build_flow
+    from repro.core.workloads import WORKLOADS
+    from repro.dataflow import (DeviceBudget, compare_sira_vs_baseline,
+                                extract_dataflow, max_throughput,
+                                search_folding)
+
+    t0 = time.perf_counter()
+    model = build_flow(WORKLOADS[name]()).model
+    dfg = extract_dataflow(model)       # shared: extraction is pure
+    fold = search_folding(model, target_fps=target_fps, device=device,
+                          dataflow_graph=dfg)
+    folding = fold.folding if fold.feasible else None
+    comp = compare_sira_vs_baseline(model, device=device, folding=folding,
+                                    dataflow_graph=dfg)
+    # a budget no workload fits: exercises binding-constraint reporting
+    tiny = DeviceBudget("tiny", luts=400, dsps=1, brams=1)
+    infeasible = search_folding(model, target_fps=target_fps, device=tiny,
+                                dataflow_graph=dfg)
+    best = max_throughput(model, device=device, dataflow_graph=dfg)
+    seconds = time.perf_counter() - t0
+
+    est = comp.sira
+    return dict(
+        workload=name,
+        graph_nodes=len(model.graph.nodes),
+        compute_nodes=len(est.nodes),
+        fifos=len(est.fifos),
+        styles=est.style_counts(),
+        baseline_styles=comp.baseline.style_counts(),
+        mean_acc_bits_sira=round(comp.mean_acc_bits_sira, 4),
+        mean_acc_bits_datatype=round(comp.mean_acc_bits_datatype, 4),
+        acc_bits_reduction=round(comp.acc_bits_reduction, 4),
+        sira_luts=round(est.luts, 1),
+        sira_dsps=est.dsps,
+        sira_brams=est.brams,
+        baseline_luts=round(comp.baseline.luts, 1),
+        baseline_dsps=comp.baseline.dsps,
+        baseline_brams=comp.baseline.brams,
+        lut_reduction=round(comp.lut_reduction, 4),
+        dsp_reduction=round(comp.dsp_reduction, 4),
+        tail_lut_ratio=round(comp.tail_lut_ratio, 4),
+        fold_feasible=fold.feasible,
+        fold_binding=fold.binding,
+        fold_fps=round(fold.achieved_fps, 1),
+        infeasible_binding=infeasible.binding,
+        max_fps=round(best.achieved_fps, 1),
+        seconds=seconds,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device", default="pynq-z1")
+    ap.add_argument("--target-fps", type=float, default=1000.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for tier1.sh uniformity (the analytical "
+                         "models are already fast; no reduced mode needed)")
+    ap.add_argument("--out", default="BENCH_dataflow.json")
+    args = ap.parse_args()
+
+    from repro.core.workloads import WORKLOADS
+
+    results = []
+    for name in WORKLOADS:
+        row = bench_workload(name, args.device, args.target_fps)
+        results.append(row)
+        print(f"{name:10s} LUT {row['baseline_luts']:8.0f}→"
+              f"{row['sira_luts']:7.0f} (-{row['lut_reduction']:.0%})  "
+              f"DSP {row['baseline_dsps']:3d}→{row['sira_dsps']:3d} "
+              f"(-{row['dsp_reduction']:.0%})  "
+              f"acc {row['mean_acc_bits_datatype']:.1f}→"
+              f"{row['mean_acc_bits_sira']:.1f}b  "
+              f"fold@{args.target_fps:g}fps="
+              f"{'ok' if row['fold_feasible'] else row['fold_binding']}  "
+              f"tiny→{row['infeasible_binding']}", flush=True)
+    payload = dict(device=args.device, target_fps=args.target_fps,
+                   results=results)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

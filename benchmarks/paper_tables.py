@@ -154,16 +154,47 @@ def t4_elementwise_model() -> List[Row]:
     return rows
 
 
+# --------------------------------------------------------------- Table 5
+
+def t5_dataflow_resources() -> List[Row]:
+    """Whole-accelerator resources (Table 5 analogue): per-workload
+    LUT/DSP/BRAM and mean accumulator width, SIRA vs the datatype-bound
+    baseline, from the dataflow DSE subsystem's graph-level models."""
+    from repro.core import build_flow
+    from repro.core.workloads import WORKLOADS
+    from repro.dataflow import compare_sira_vs_baseline
+
+    rows: List[Row] = []
+    for name, maker in WORKLOADS.items():
+        t0 = time.perf_counter()
+        model = build_flow(maker()).model
+        comp = compare_sira_vs_baseline(model)
+        us = (time.perf_counter() - t0) * 1e6
+        s, b = comp.sira, comp.baseline
+        rows.append((
+            f"t5_{name}", us,
+            f"luts={b.luts:.0f}->{s.luts:.0f}"
+            f"(-{comp.lut_reduction:.0%});"
+            f"dsps={b.dsps}->{s.dsps}(-{comp.dsp_reduction:.0%});"
+            f"brams={b.brams}->{s.brams};"
+            f"acc={comp.mean_acc_bits_datatype:.1f}->"
+            f"{comp.mean_acc_bits_sira:.1f}b"
+            f"(-{comp.acc_bits_reduction:.0%});paper=-17%LUT,-66%DSP,"
+            f"-22%acc"))
+    return rows
+
+
 # --------------------------------------------------------------- Table 6
 
 def t6_workloads() -> List[Row]:
     """End-to-end QNN workloads (Table 6 analogue): SIRA opts on the four
-    paper topologies via one build_flow; LUT deltas projected via the
-    analytical models."""
+    paper topologies via one build_flow; the layer-tail rLUT now comes
+    from the dataflow DSE subsystem's per-node estimates (same models,
+    graph-aware geometry) instead of ad-hoc per-report math."""
     from repro.core import build_flow, summarize
-    from repro.core.costmodel import (lut_composite_total,
-                                      lut_threshold_total, tpu_tail_bytes)
+    from repro.core.costmodel import tpu_tail_bytes
     from repro.core.workloads import WORKLOADS
+    from repro.dataflow import compare_sira_vs_baseline
 
     rows: List[Row] = []
     paper = {"TFC-w2a2": (0.77, 0.0), "CNV-w2a2": (0.95, 0.0),
@@ -176,15 +207,9 @@ def t6_workloads() -> List[Row]:
         reps = result.accumulator_reports
         specs = result.threshold_specs
         s = summarize(reps)
-        pe, C = 4, 128
-        # projected layer-tail LUTs: baseline composite at datatype-bound
-        # accumulator width vs thresholding at the SIRA width
-        base_luts = opt_luts = 0.0
-        for r, spec in zip(reps, specs + [None] * len(reps)):
-            base_luts += lut_composite_total(r.datatype_bits, 16, C, pe)
-            n_o = wl.act_bits
-            opt_luts += lut_threshold_total(r.sira_bits, n_o, C, pe)
-        rlut = opt_luts / base_luts if base_luts else 1.0
+        comp = compare_sira_vs_baseline(result.model)
+        rlut = comp.tail_lut_ratio
+        C = 128
         hbm_base = tpu_tail_bytes(1 << 20, 32, wl.act_bits, C,
                                   "composite", fused=False)
         hbm_opt = tpu_tail_bytes(1 << 20, int(s["mean_sira"]),

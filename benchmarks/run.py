@@ -9,14 +9,16 @@ import traceback
 def main() -> None:
     from benchmarks.paper_tables import (f22_accumulators, f23_crossover,
                                          t1_qat_scales, t3_worked_example,
-                                         t4_elementwise_model, t6_workloads,
-                                         t7_layer_tails)
+                                         t4_elementwise_model,
+                                         t5_dataflow_resources,
+                                         t6_workloads, t7_layer_tails)
     from benchmarks.kernels_bench import kernel_benchmarks
 
     suites = [
         ("t1", t1_qat_scales),
         ("t3", t3_worked_example),
         ("t4", t4_elementwise_model),
+        ("t5", t5_dataflow_resources),
         ("t6", t6_workloads),
         ("t7", t7_layer_tails),
         ("f22", f22_accumulators),

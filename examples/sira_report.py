@@ -1,26 +1,25 @@
-"""SIRA analysis report for any assigned architecture: accumulator widths,
-layer-tail implementation choice, and FPGA/TPU cost projections — driven
-by the SiraModel pass pipeline.
+"""SIRA analysis report: accumulator widths, layer-tail implementation
+choice, and FPGA/TPU cost projections — driven by the SiraModel pass
+pipeline.  With ``--workload``, additionally runs the dataflow DSE
+subsystem and prints the per-node resource/II/style report plus the
+SIRA-vs-baseline accelerator deltas and the folding search.
 
     PYTHONPATH=src python examples/sira_report.py --arch glm4-9b
+    PYTHONPATH=src python examples/sira_report.py --workload TFC-w2a2
 """
 import argparse
 
 
 from repro.configs import get_config, list_archs
 from repro.core import (MinimizeAccumulators, SiraModel, Streamline,
-                        summarize)
-from repro.core.costmodel import select_tail_style, tail_cost
+                        build_flow, summarize)
+from repro.core.workloads import WORKLOADS
+from repro.dataflow import (compare_sira_vs_baseline, extract_dataflow,
+                            search_folding, select_tail_style, tail_cost)
 from repro.models.export import export_block_graph
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
-    ap.add_argument("--w-bits", type=int, default=4)
-    ap.add_argument("--a-bits", type=int, default=4)
-    args = ap.parse_args()
-
+def arch_report(args) -> None:
     cfg = get_config(args.arch, reduced=True)
     print(f"=== SIRA report: {args.arch} (reduced block, "
           f"w{args.w_bits}a{args.a_bits}) ===")
@@ -46,6 +45,71 @@ def main() -> None:
     print("TPU mapping: accumulator dtype "
           f"{'int16' if s['mean_sira'] <= 15 else 'int32'}, fused "
           f"multithreshold tail (1 HBM pass)")
+
+
+def workload_report(args) -> None:
+    print(f"=== Dataflow DSE report: {args.workload} on {args.device} ===")
+    model = build_flow(WORKLOADS[args.workload]()).model
+    dfg = extract_dataflow(model)
+    fold = search_folding(model, target_fps=args.target_fps,
+                          device=args.device, dataflow_graph=dfg)
+    folding = fold.folding if fold.feasible else None
+    comp = compare_sira_vs_baseline(model, device=args.device,
+                                    folding=folding, dataflow_graph=dfg)
+    est = comp.sira
+
+    print(f"\n{'node':22s} {'kind':11s} {'style':13s} {'PExSIMD':>8s} "
+          f"{'II':>7s} {'bits i/o/acc':>12s} {'LUT':>7s} {'DSP':>4s} "
+          f"{'BRAM':>5s}")
+    for n in est.nodes:
+        mark = " <- bottleneck" if n.name == est.bottleneck else ""
+        print(f"{n.name:22s} {n.kind:11s} {n.style:13s} "
+              f"{n.pe:>4d}x{n.simd:<3d} {n.cycles:>7d} "
+              f"{n.in_bits:>4d}/{n.out_bits}/{n.acc_bits:<3d} "
+              f"{n.luts:>7.0f} {n.dsps:>4d} {n.brams:>5d}{mark}")
+    fifo_luts = sum(f.luts for f in est.fifos)
+    fifo_brams = sum(f.brams for f in est.fifos)
+    print(f"{'(stream FIFOs)':22s} {'':11s} {'':13s} {'':>8s} {'':>7s} "
+          f"{'':>12s} {fifo_luts:>7.0f} {'':>4s} {fifo_brams:>5d}")
+
+    b = comp.baseline
+    print("\ntotals (SIRA vs datatype-bound baseline, same folding):")
+    print(f"  LUTs {b.luts:,.0f} -> {est.luts:,.0f} "
+          f"(-{comp.lut_reduction:.0%}; paper -17%)")
+    print(f"  DSPs {b.dsps} -> {est.dsps} "
+          f"(-{comp.dsp_reduction:.0%}; paper -66%)")
+    print(f"  BRAMs {b.brams} -> {est.brams}")
+    print(f"  mean accumulator {comp.mean_acc_bits_datatype:.1f}b -> "
+          f"{comp.mean_acc_bits_sira:.1f}b "
+          f"(-{comp.acc_bits_reduction:.0%}; paper -22%)")
+    print(f"  layer-tail rLUT {comp.tail_lut_ratio:.2f}")
+
+    print(f"\nfolding search @ {args.target_fps:g} FPS on {args.device}:")
+    if fold.feasible:
+        util = ", ".join(f"{k} {v:.0%}"
+                         for k, v in fold.utilization.items())
+        print(f"  feasible — achieved {fold.achieved_fps:,.0f} FPS "
+              f"({util})")
+    else:
+        print(f"  infeasible — binding constraint: {fold.binding}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
+    ap.add_argument("--workload", choices=sorted(WORKLOADS),
+                    help="print the dataflow DSE per-node report for a "
+                         "QNN workload instead of an LM-arch report")
+    ap.add_argument("--device", default="pynq-z1")
+    ap.add_argument("--target-fps", type=float, default=1000.0)
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=4)
+    args = ap.parse_args()
+
+    if args.workload:
+        workload_report(args)
+    else:
+        arch_report(args)
 
 
 if __name__ == "__main__":

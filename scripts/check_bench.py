@@ -14,7 +14,13 @@ Metric classes (see ``RULES``):
 * ``ratio``  — derived ratios (speedups, occupancy, acceptance; higher
   is better): fail when below baseline by more than ``--ratio-tol``,
   with optional hard floors (compiled must never lose to the
-  interpreter: ``speedup >= 1.0``).
+  interpreter: ``speedup >= 1.0``);
+* ``estimate`` — deterministic analytical-model outputs (the dataflow
+  DSE resource/FPS numbers): no machine noise, so they get a tight
+  two-sided ``--estimate-tol`` band that only absorbs deliberate small
+  coefficient tweaks, plus hard floors where the paper's claim is
+  directional (SIRA must *reduce* LUTs/DSPs/accumulator bits:
+  ``*_reduction > 0``).
 
 Failures print a metric-by-metric diff table (also appended to
 ``$GITHUB_STEP_SUMMARY`` when set, so the regression is readable from
@@ -68,6 +74,39 @@ RULES = {
             "tokens_per_decode_step": ("ratio", None),
         },
     },
+    "BENCH_dataflow.json": {
+        "key": ("workload",),
+        "context": ("device", "target_fps"),
+        "metrics": {
+            # topology + decisions: purely structural, any drift is a
+            # changed extraction/selection algorithm — exact
+            "graph_nodes": ("exact", None),
+            "compute_nodes": ("exact", None),
+            "fifos": ("exact", None),
+            "styles": ("exact", None),
+            "baseline_styles": ("exact", None),
+            "mean_acc_bits_sira": ("exact", None),
+            "mean_acc_bits_datatype": ("exact", None),
+            "fold_feasible": ("exact", None),
+            "fold_binding": ("exact", None),
+            "infeasible_binding": ("exact", None),
+            # analytical resource estimates: banded, with the paper's
+            # directional claims as hard floors (reduction must stay > 1%)
+            "sira_luts": ("estimate", None),
+            "sira_dsps": ("estimate", None),
+            "sira_brams": ("estimate", None),
+            "baseline_luts": ("estimate", None),
+            "baseline_dsps": ("estimate", None),
+            "baseline_brams": ("estimate", None),
+            "lut_reduction": ("estimate", 0.01),
+            "dsp_reduction": ("estimate", 0.01),
+            "acc_bits_reduction": ("estimate", 0.01),
+            "tail_lut_ratio": ("estimate", None),
+            "fold_fps": ("estimate", None),
+            "max_fps": ("estimate", None),
+            "seconds": ("timing", None),
+        },
+    },
 }
 
 
@@ -97,7 +136,8 @@ def _fmt(v) -> str:
 
 def _compare_metric(where: str, metric: str, kind: str,
                     floor: Optional[float], base, fresh,
-                    timing_tol: float, ratio_tol: float) -> Row:
+                    timing_tol: float, ratio_tol: float,
+                    estimate_tol: float) -> Row:
     if base is None and fresh is None:
         return Row(where, metric, base, fresh, "ok")
     if base is None or fresh is None:
@@ -127,6 +167,16 @@ def _compare_metric(where: str, metric: str, kind: str,
             return Row(where, metric, base, fresh, "ok",
                        "much faster — consider --update")
         return Row(where, metric, base, fresh, "ok")
+    if kind == "estimate":                     # deterministic model output
+        if floor is not None and fresh_f < floor:
+            return Row(where, metric, base, fresh, "FAIL",
+                       f"below hard floor {floor:g}")
+        band = abs(base_f) * estimate_tol
+        if abs(fresh_f - base_f) > band:
+            return Row(where, metric, base, fresh, "FAIL",
+                       f"analytical estimate drifted beyond "
+                       f"±{estimate_tol:.0%}")
+        return Row(where, metric, base, fresh, "ok")
     if kind == "ratio":                        # higher is better
         if floor is not None and fresh_f < floor:
             return Row(where, metric, base, fresh, "FAIL",
@@ -143,7 +193,8 @@ def _compare_metric(where: str, metric: str, kind: str,
 
 
 def check_file(name: str, fresh_path: Path, base_path: Path,
-               timing_tol: float, ratio_tol: float) -> List[Row]:
+               timing_tol: float, ratio_tol: float,
+               estimate_tol: float) -> List[Row]:
     rules = RULES[name]
     rows: List[Row] = []
     if not fresh_path.exists():
@@ -179,7 +230,7 @@ def check_file(name: str, fresh_path: Path, base_path: Path,
                 continue                  # metric not produced by this row
             rows.append(_compare_metric(
                 where, metric, kind, floor, b.get(metric), f.get(metric),
-                timing_tol, ratio_tol))
+                timing_tol, ratio_tol, estimate_tol))
     return rows
 
 
@@ -216,6 +267,11 @@ def main(argv=None) -> int:
                     help="allowed relative drop on speedup/occupancy/"
                          "acceptance ratios (default 0.5; ratios divide "
                          "out machine load but CPU jitter remains)")
+    ap.add_argument("--estimate-tol", type=float, default=0.05,
+                    help="two-sided band on deterministic analytical "
+                         "estimates (dataflow DSE resources/FPS; default "
+                         "0.05 — these have no machine noise, the band "
+                         "only absorbs deliberate coefficient tweaks)")
     ap.add_argument("--update", action="store_true",
                     help="copy the fresh artifacts over the baselines "
                          "(deliberate re-baseline; commit the result)")
@@ -245,7 +301,8 @@ def main(argv=None) -> int:
                   f"scripts/check_bench.py --update and commit it")
             return 2
         all_rows += check_file(name, fresh_dir / name, base_path,
-                               args.timing_tol, args.ratio_tol)
+                               args.timing_tol, args.ratio_tol,
+                               args.estimate_tol)
 
     failures = [r for r in all_rows if r.failed]
     shown = failures if failures else \

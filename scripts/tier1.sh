@@ -2,8 +2,9 @@
 # Tier-1 verification: the full test suite, fail-fast, from the repo root
 # (includes the kernel interpret-mode sweeps and the compiled-backend
 # equivalence tests), then the benchmark smoke runs which emit
-# BENCH_backend.json and BENCH_serving.json, then the perf-regression
-# gate comparing them against the committed benchmarks/baselines/.
+# BENCH_backend.json, BENCH_serving.json and BENCH_dataflow.json, then
+# the perf-regression gate comparing them against the committed
+# benchmarks/baselines/.
 #   bash scripts/tier1.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -12,6 +13,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_backend.py \
     --quick --out BENCH_backend.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_serving.py \
     --quick --out BENCH_serving.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_dataflow.py \
+    --quick --out BENCH_dataflow.json
 # CHECK_BENCH_ARGS lets CI widen the absolute-timing envelope for runner
 # hardware that differs from the baseline machine (ratios/exacts still gate)
 python scripts/check_bench.py ${CHECK_BENCH_ARGS:-}

@@ -24,7 +24,7 @@ from .thresholds import (convert_tails_to_thresholds,      # noqa: F401
 from .accumulator import (minimize_accumulators, datatype_bound_bits,  # noqa: F401
                           sira_bits, summarize, accumulator_dtype,
                           exact_worst_case_bits)
-from . import costmodel                                    # noqa: F401
+from . import costmodel  # noqa: F401  (lazy shim over dataflow.costmodel)
 from .verify import verify_ranges, instrument, stuck_channels  # noqa: F401
 from .passes import (Transformation, Fixpoint, Sequence,   # noqa: F401
                      FunctionTransformation, ExplicitizeQuantizers,
@@ -36,4 +36,4 @@ from .lower import (lower, CompiledSiraModel, CompileBackend,  # noqa: F401
                     LoweringError)
 from .flow import (BuildConfig, BuildResult, StepReport,   # noqa: F401
                    build_flow, register_step, STEP_REGISTRY,
-                   DEFAULT_STEPS)
+                   DEFAULT_STEPS, DATAFLOW_STEPS)

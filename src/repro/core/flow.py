@@ -58,6 +58,10 @@ class BuildConfig:
     verify_samples: int = 3
     seed: int = 0
     strict_verify: bool = True
+    # dataflow DSE steps (step_dataflow_estimate / step_dataflow_fold):
+    # None -> unfolded estimate; DataflowFold then targets 30 FPS
+    device: str = "pynq-z1"
+    target_fps: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -136,6 +140,29 @@ register_step("step_compile")(
     lambda cfg: CompileBackend())
 register_step("compile")(
     lambda cfg: CompileBackend())
+
+
+# dataflow DSE steps (imported lazily: repro.dataflow itself imports core
+# submodules, so the factories must not run at module import time).
+# Graph-preserving; results land under metadata['dataflow_report'] /
+# metadata['dataflow_estimate'] / metadata['folding'].
+def _step_dataflow_estimate(cfg: "BuildConfig"):
+    from ..dataflow.passes import DataflowEstimate
+    return DataflowEstimate(device=cfg.device, target_fps=cfg.target_fps)
+
+
+def _step_dataflow_fold(cfg: "BuildConfig"):
+    from ..dataflow.passes import DataflowFold
+    return DataflowFold(target_fps=cfg.target_fps or 30.0,
+                        device=cfg.device)
+
+
+register_step("step_dataflow_estimate")(_step_dataflow_estimate)
+register_step("step_dataflow_fold")(_step_dataflow_fold)
+
+#: DEFAULT_STEPS plus the dataflow DSE tail — the full accelerator flow
+DATAFLOW_STEPS: List[str] = list(DEFAULT_STEPS) + [
+    "step_dataflow_estimate", "step_dataflow_fold"]
 
 
 def resolve_step(step: Step, cfg: BuildConfig) -> Transformation:

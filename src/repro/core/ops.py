@@ -113,3 +113,13 @@ class RegistryView(MutableMapping):
 EXEC_REGISTRY = RegistryView("execute")
 PROP_REGISTRY = RegistryView("propagate")
 COST_REGISTRY = RegistryView("cost")
+
+# Table 4 analytical LUT coefficients (LUT = alpha * f(n_i, n_p) * PE +
+# beta), registered here — where the unified registry lives — so that
+# repro.core never has to import its consumer subsystem
+# (repro.dataflow.costmodel) for the side effect.  "ToInt" and "Max" are
+# meta-kernel styles rather than graph op types, registered cost-only.
+register_op("Mul", cost=dict(alpha=1.18, beta=124))
+register_op("Add", cost=dict(alpha=2.0, beta=24))
+register_op("ToInt", cost=dict(alpha=4.2, beta=13))
+register_op("Max", cost=dict(alpha=4.0, beta=21))

@@ -27,6 +27,7 @@ shims kept for the pre-``SiraModel`` API.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -330,8 +331,17 @@ def remove_identity_ops(g: Graph) -> bool:
 # deprecated function-style entry points (pre-SiraModel API)
 # --------------------------------------------------------------------------
 
+def _warn_deprecated(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"repro.core.streamline.{name}() is a deprecated pre-SiraModel "
+        f"entry point; use {replacement}",
+        DeprecationWarning, stacklevel=3)
+
+
 def explicitize_quantizers(graph: Graph) -> Graph:
     """Deprecated shim — prefer ``passes.ExplicitizeQuantizers``."""
+    _warn_deprecated("explicitize_quantizers",
+                     "passes.ExplicitizeQuantizers on a SiraModel")
     g = graph.copy()
     explicitize_quantizers_inplace(g)
     return g
@@ -340,17 +350,17 @@ def explicitize_quantizers(graph: Graph) -> Graph:
 def duplicate_shared_constants(graph: Graph) -> Graph:
     """Deprecated shim — constant duplication happens inside the
     ``passes.AggregateScalesBiases`` pass."""
+    _warn_deprecated("duplicate_shared_constants",
+                     "passes.AggregateScalesBiases on a SiraModel")
     g = graph.copy()
     duplicate_shared_constants_inplace(g)
     return g
 
 
-def aggregate_scales_biases(
+def _aggregate_scales_biases(
         graph: Graph,
         input_ranges: Dict[str, ScaledIntRange],
         explicitize: bool = True) -> AggregationResult:
-    """Deprecated shim — prefer ``passes.AggregateScalesBiases`` on a
-    ``SiraModel`` (which reuses the model's cached analysis)."""
     g = graph.copy()
     if explicitize:
         explicitize_quantizers_inplace(g)
@@ -360,9 +370,21 @@ def aggregate_scales_biases(
     return result
 
 
+def aggregate_scales_biases(
+        graph: Graph,
+        input_ranges: Dict[str, ScaledIntRange],
+        explicitize: bool = True) -> AggregationResult:
+    """Deprecated shim — prefer ``passes.AggregateScalesBiases`` on a
+    ``SiraModel`` (which reuses the model's cached analysis)."""
+    _warn_deprecated("aggregate_scales_biases",
+                     "passes.AggregateScalesBiases on a SiraModel")
+    return _aggregate_scales_biases(graph, input_ranges, explicitize)
+
+
 def streamline(graph: Graph, input_ranges: Dict[str, ScaledIntRange]
                ) -> AggregationResult:
     """Full SIRA streamlining: explicitize + aggregate (threshold conversion
     is a separate, optional pass — see thresholds.py).  Deprecated shim —
     prefer ``passes.Streamline`` / ``flow.build_flow``."""
-    return aggregate_scales_biases(graph, input_ranges)
+    _warn_deprecated("streamline", "passes.Streamline / flow.build_flow")
+    return _aggregate_scales_biases(graph, input_ranges)

@@ -1,0 +1,321 @@
+"""Dataflow DSE subsystem: analytical resource/II/FIFO models validated
+against the cycle-accurate stream simulator, Fig-23 style-selection pins,
+folding search, SIRA-vs-baseline reductions (the acceptance criteria),
+and build-flow integration."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import DATAFLOW_STEPS, build_flow
+from repro.core.workloads import WORKLOADS, make_cnv, make_tfc
+from repro.dataflow import (DeviceBudget, NodeModel, SimEdge, SimNode,
+                            analytical_ii, compare_sira_vs_baseline,
+                            cycles_per_frame, estimate, extract_dataflow,
+                            fifo_depth, fifo_resources, fold_options,
+                            from_estimate, get_device, max_throughput,
+                            node_resources, search_folding, select_style,
+                            select_tail_style, simulate, widen_dataflow)
+
+
+@pytest.fixture(scope="module")
+def models():
+    """Optimized SiraModels of all four QNN workloads (built once)."""
+    return {name: build_flow(maker()).model
+            for name, maker in WORKLOADS.items()}
+
+
+# --------------------------------------------------------------------------
+# property test: analytical II + FIFO depths vs the cycle-accurate sim
+# --------------------------------------------------------------------------
+
+def _sized_edges(nodes, topology):
+    """FIFO-size a topology exactly as ``estimate`` does: analytical
+    depths from rate imbalance + join-latency skew."""
+    by = {n.name: n for n in nodes}
+    ii = {n.name: n.stride * n.outputs_per_frame for n in nodes}
+    producers_of = {}
+    for s, d in topology:
+        producers_of.setdefault(nodes[d].name, []).append(nodes[s].name)
+    lat = {}
+    for n in nodes:
+        best = 0.0
+        for p in producers_of.get(n.name, ()):
+            cin = by[p].outputs_per_frame
+            ipo = max(1, math.ceil(cin / n.outputs_per_frame))
+            best = max(best, lat[p] + ipo * ii[p] / by[p].outputs_per_frame)
+        lat[n.name] = best + n.stride
+    edges = []
+    for s, d in topology:
+        p, c = nodes[s], nodes[d]
+        arrivals = {pp: lat[pp] for pp in producers_of[c.name]}
+        skew = max(arrivals.values()) - arrivals[p.name]
+        cin = p.outputs_per_frame
+        ipo = max(1, math.ceil(cin / c.outputs_per_frame))
+        depth = fifo_depth(cin, ii[p.name], ii[c.name], ipo=ipo,
+                           skew_cycles=skew)
+        edges.append(SimEdge(src=p.name, dst=c.name, cin=cin,
+                             cout=c.outputs_per_frame, depth=depth))
+    return edges
+
+
+def test_analytical_models_match_simulator_on_random_graphs():
+    """Property: on randomized small chains and diamonds, the analytically
+    sized FIFOs never deadlock and never degrade steady-state throughput —
+    the simulated cycles-per-frame equals the analytical max-node-II."""
+    rng = np.random.default_rng(0)
+    for trial in range(60):
+        if trial % 3 < 2:                       # chain, 2-5 nodes
+            n = int(rng.integers(2, 6))
+            nodes = [SimNode(f"n{i}", int(rng.integers(1, 6)),
+                             int(rng.integers(1, 9))) for i in range(n)]
+            topo = [(i, i + 1) for i in range(n - 1)]
+        else:                                    # diamond (join skew)
+            nodes = [SimNode(f"n{i}", int(rng.integers(1, 6)),
+                             int(rng.integers(1, 9))) for i in range(4)]
+            topo = [(0, 1), (0, 2), (1, 3), (2, 3)]
+        edges = _sized_edges(nodes, topo)
+        res = simulate(nodes, edges, frames=5)
+        assert not res.deadlocked, (nodes, topo)
+        assert res.cycles_per_frame == analytical_ii(nodes), (nodes, topo)
+        for e in edges:                          # capacity never exceeded
+            assert res.max_occupancy[(e.src, e.dst)] <= e.depth
+
+
+def test_simulator_validates_real_tfc_estimate(models):
+    """The analytical graph estimate of the real (streamlined) TFC model
+    reproduces exactly in the cycle-accurate simulator."""
+    est = estimate(models["TFC-w2a2"])
+    nodes, edges = from_estimate(est)
+    res = simulate(nodes, edges, frames=3)
+    assert not res.deadlocked
+    assert res.cycles_per_frame == est.max_cycles
+
+
+def test_undersized_fifo_degrades_or_deadlocks():
+    """Sanity that the simulator actually exercises backpressure: a
+    depth-starved FIFO between a slow producer and a bursty consumer
+    cannot sustain the analytical II."""
+    nodes = [SimNode("a", 1, 8), SimNode("b", 8, 1)]
+    good = simulate(nodes, [SimEdge("a", "b", 8, 1,
+                                    fifo_depth(8, 8, 8, ipo=8))], frames=5)
+    assert good.cycles_per_frame == analytical_ii(nodes)
+    bad = simulate(nodes, [SimEdge("a", "b", 8, 1, 1)], frames=5)
+    assert bad.deadlocked or bad.cycles_per_frame > analytical_ii(nodes)
+
+
+# --------------------------------------------------------------------------
+# Fig 23 regression pins: select_tail_style crossover points
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("channels,pe,crossover", [
+    (64, 1, 7), (64, 4, 9),
+    (256, 1, 5), (256, 4, 7), (256, 16, 8),
+    (1024, 1, 4), (1024, 16, 7),
+])
+def test_fig23_crossover_pins(channels, pe, crossover):
+    """Pin the output-bitwidth at which the per-tail style flips from
+    thresholding to composite (Fig 23 shape: more channels or less
+    parallelism moves the crossover down)."""
+    styles = [select_tail_style(24, n_o, 16, channels, pe)
+              for n_o in range(2, 11)]
+    flip = next((n_o for n_o, s in zip(range(2, 11), styles)
+                 if s == "composite"), None)
+    assert flip == crossover
+    # monotone: once composite wins it stays won (threshold memory is
+    # exponential in n_o, composite is constant)
+    assert styles == sorted(styles, key=lambda s: s == "composite")
+
+
+def test_select_tail_style_paper_rule_boundaries():
+    """§7.3.2: <4-bit outputs are always thresholding, >8-bit always
+    composite, regardless of what the models would prefer."""
+    assert select_tail_style(24, 3, 16, 10**6, 1) == "thresholding"
+    assert select_tail_style(24, 9, 16, 1, 1) == "composite"
+
+
+# --------------------------------------------------------------------------
+# per-node models
+# --------------------------------------------------------------------------
+
+def test_cycles_monotone_in_folding():
+    nm = NodeModel(name="m", op_type="MatMul", kind="mvau", pixels=4,
+                   channels=12, K=30)
+    opts = fold_options(nm)
+    assert all(nm.channels % pe == 0 and nm.K % simd == 0
+               for pe, simd in opts)
+    full = cycles_per_frame(nm, 1, 1)
+    assert full == 4 * 12 * 30
+    for pe, simd in opts:
+        assert cycles_per_frame(nm, pe, simd) <= full
+    assert cycles_per_frame(nm, 12, 30) == 4
+
+
+def test_mvau_style_follows_bitwidths():
+    """SIRA-narrowed MACs map to LUTs, wide ones to DSP slices — the
+    bitwidth-driven style selection of §7.3.2 generalized to MVAUs."""
+    narrow = NodeModel(name="n", op_type="MatMul", kind="mvau", pixels=1,
+                       channels=64, K=64, in_bits=2, weight_bits=2,
+                       acc_bits=12)
+    wide = NodeModel(name="w", op_type="MatMul", kind="mvau", pixels=1,
+                     channels=64, K=64, in_bits=8, weight_bits=8,
+                     acc_bits=24)
+    assert select_style(narrow) == "lut_mac"
+    assert select_style(wide) == "dsp_mac"
+    # DSP packing: two 8-bit MACs per slice
+    r = node_resources(wide, "dsp_mac", pe=4, simd=2)
+    assert r.dsps == 4
+    r16 = node_resources(
+        NodeModel(name="w16", op_type="MatMul", kind="mvau", pixels=1,
+                  channels=64, K=64, in_bits=16, weight_bits=16,
+                  acc_bits=40), "dsp_mac", pe=4, simd=2)
+    assert r16.dsps == 8
+
+
+def test_fifo_resources_srl_vs_bram_cutover():
+    small = fifo_resources(depth=16, width_bits=8)       # 128 bits: SRL
+    assert small.brams == 0 and small.luts > 0
+    big = fifo_resources(depth=4096, width_bits=32)      # 128Kb: BRAM
+    assert big.brams >= 1
+
+
+def test_get_device_unknown_raises():
+    with pytest.raises(KeyError, match="unknown device"):
+        get_device("nonexistent-part")
+
+
+# --------------------------------------------------------------------------
+# acceptance criteria: SIRA vs baseline on all four QNN workloads
+# --------------------------------------------------------------------------
+
+def test_sira_reduces_resources_on_all_workloads(models):
+    """The paper's headline direction on every workload: fewer LUTs,
+    fewer DSPs, narrower mean accumulators than the datatype-bound
+    baseline on the same topology and folding."""
+    for name, model in models.items():
+        comp = compare_sira_vs_baseline(model)
+        assert comp.lut_reduction > 0, name
+        assert comp.dsp_reduction > 0, name
+        assert comp.acc_bits_reduction > 0, name
+        assert comp.mean_acc_bits_sira < comp.mean_acc_bits_datatype, name
+        # same topology on both sides — only widths/styles differ
+        assert len(comp.sira.nodes) == len(comp.baseline.nodes)
+        assert [n.cycles for n in comp.sira.nodes] == \
+            [n.cycles for n in comp.baseline.nodes]
+
+
+def test_extract_dataflow_tfc_structure(models):
+    """TFC streamlines to an MVAU/threshold ladder; every compute node
+    and every inter-node stream is modeled."""
+    dfg = extract_dataflow(models["TFC-w2a2"])
+    kinds = [n.kind for n in dfg.nodes]
+    assert kinds.count("mvau") == 3          # three FC layers
+    assert kinds.count("threshold") == 2     # two quantized activations
+    assert len(dfg.edges) == len(dfg.nodes) - 1   # pure chain
+
+
+def test_baseline_styles_are_conservative(models):
+    comp = compare_sira_vs_baseline(models["TFC-w2a2"])
+    assert set(comp.baseline.style_counts()) == {"dsp_mac", "composite"}
+    assert "thresholding" in comp.sira.style_counts()
+
+
+# --------------------------------------------------------------------------
+# folding search
+# --------------------------------------------------------------------------
+
+def test_folding_hits_target_fps_within_budget(models):
+    fold = search_folding(models["TFC-w2a2"], target_fps=1000.0,
+                          device="pynq-z1")
+    assert fold.feasible and fold.binding is None
+    assert fold.achieved_fps >= 1000.0
+    assert all(v <= 1.0 for v in fold.utilization.values())
+    # a tighter target than the fully-folded II (4096 cycles ≈ 24k FPS)
+    # forces the search to actually parallelize the bottleneck MVAUs
+    tight = search_folding(models["TFC-w2a2"], target_fps=100_000.0,
+                           device="pynq-z1")
+    assert tight.feasible and tight.achieved_fps >= 100_000.0
+    assert any(pe * simd > 1 for pe, simd in tight.folding.values())
+
+
+def test_folding_infeasible_budget_reports_binding_resource(models):
+    tiny = DeviceBudget("tiny", luts=400, dsps=1, brams=1)
+    fold = search_folding(models["TFC-w2a2"], target_fps=1000.0,
+                          device=tiny)
+    assert not fold.feasible
+    assert fold.binding in ("luts", "dsps", "brams")
+    assert fold.utilization[fold.binding] > 1.0
+
+
+def test_folding_infeasible_throughput_reports_binding_node():
+    """A conv workload cannot stream one frame per clock cycle: the
+    throughput-bound node is named in the binding constraint."""
+    model = build_flow(make_cnv()).model
+    fold = search_folding(model, target_fps=99e6, device="u250")
+    assert not fold.feasible
+    assert fold.binding.startswith("ii:")
+
+
+def test_folding_search_prices_widened_nodes(models):
+    """The search must optimize the same cost model estimate() judges
+    with: raw extracted MVAUs carry a placeholder acc_bits=32 that would
+    inflate every MAC toward dsp_mac."""
+    model = models["TFC-w2a2"]
+    dfg = extract_dataflow(model)
+    wide = widen_dataflow(model, dfg)
+    mvaus = [n for n in dfg.nodes if n.kind == "mvau"]
+    assert mvaus and all(wide[n.name].acc_bits < 32 for n in mvaus)
+    tight = search_folding(model, target_fps=100_000.0, device="pynq-z1")
+    styles = {n.name: n.style for n in tight.estimate.nodes}
+    assert any(styles[n.name] == "lut_mac" for n in mvaus)
+
+
+def test_extract_dataflow_folds_constant_weight_prep(models):
+    """A weight produced by an all-constant subgraph (e.g. a wscale Mul)
+    stays a weight memory with its proven SIRA width — it must not
+    become a dynamic stream or fall back to a default width."""
+    dfg = extract_dataflow(models["CNV-w2a2"])
+    mvaus = [n for n in dfg.nodes if n.kind == "mvau"]
+    assert all(n.weight_bits <= 4 for n in mvaus)   # w2a2 conv + fc
+    consumers = {e.consumer for e in dfg.edges}
+    producers = {e.producer for e in dfg.edges}
+    # every modeled stream connects two compute nodes of the graph
+    names = {n.name for n in dfg.nodes}
+    assert consumers <= names and producers <= names
+
+
+def test_max_throughput_is_feasible_and_fastest(models):
+    model = models["TFC-w2a2"]
+    best = max_throughput(model, device="pynq-z1")
+    assert best.feasible
+    slow = search_folding(model, target_fps=1000.0, device="pynq-z1")
+    assert best.achieved_fps >= slow.achieved_fps
+
+
+# --------------------------------------------------------------------------
+# build-flow integration + shims
+# --------------------------------------------------------------------------
+
+def test_dataflow_flow_steps_ride_cached_analysis():
+    result = build_flow(make_tfc(), steps=DATAFLOW_STEPS,
+                        target_fps=1000.0)
+    report = result.model.metadata["dataflow_report"]
+    folding = result.model.metadata["folding"]
+    assert report.lut_reduction > 0
+    assert folding.feasible
+    by_name = {s.name: s for s in result.steps}
+    assert by_name["DataflowEstimate"].analysis_calls == 0
+    assert by_name["DataflowFold"].analysis_calls == 0
+    assert not by_name["DataflowEstimate"].modified
+
+
+def test_core_costmodel_shim_resolves_to_dataflow():
+    """The absorbed module keeps working: same objects, not copies."""
+    from repro.core import costmodel as old
+    from repro.dataflow import costmodel as new
+    assert old.select_tail_style is new.select_tail_style
+    assert old.lut_composite_total is new.lut_composite_total
+    assert old.ELEMENTWISE_COEFFS is new.ELEMENTWISE_COEFFS
+    assert "tail_cost" in dir(old)
+    with pytest.raises(AttributeError):
+        old.not_a_cost_model

@@ -159,6 +159,34 @@ def test_streamline_pass_semantically_stable():
 # old shims == new passes
 # --------------------------------------------------------------------------
 
+def test_deprecated_function_entry_points_warn():
+    """The pre-SiraModel function-style API is deprecated: every loose
+    entry point in core.streamline emits a DeprecationWarning naming its
+    pass-based replacement (the result is still correct — the shim tests
+    below run with warnings suppressed by default pytest config)."""
+    from repro.core.streamline import (aggregate_scales_biases,
+                                       duplicate_shared_constants,
+                                       explicitize_quantizers)
+    wl = make_tfc()
+    with pytest.warns(DeprecationWarning, match="streamline\\(\\) is"):
+        streamline(wl.graph, wl.input_range)
+    with pytest.warns(DeprecationWarning,
+                      match="aggregate_scales_biases"):
+        aggregate_scales_biases(wl.graph, wl.input_range)
+    with pytest.warns(DeprecationWarning, match="ExplicitizeQuantizers"):
+        explicitize_quantizers(wl.graph)
+    with pytest.warns(DeprecationWarning, match="AggregateScalesBiases"):
+        duplicate_shared_constants(wl.graph)
+    # each call warns exactly once (streamline delegates internally
+    # without re-warning)
+    import warnings as _w
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        streamline(wl.graph, wl.input_range)
+    assert sum(issubclass(w.category, DeprecationWarning)
+               for w in caught) == 1
+
+
 def test_old_shim_equals_new_pass_path_on_tfc():
     wl = make_tfc()
     res = streamline(wl.graph, wl.input_range)
