@@ -223,6 +223,37 @@ def t6_workloads() -> List[Row]:
     return rows
 
 
+# ------------------------------------------------------ domain comparison
+
+def t6b_domains() -> List[Row]:
+    """Interval vs affine-form (zonotope) abstract domain on the four
+    paper workloads: summed proven accumulator bits and unfolded LUTs at
+    the same design point.  The affine reduced product may tighten but
+    never loosen the interval bounds, so saved >= 0 always."""
+    from repro.core import build_flow
+    from repro.core.workloads import WORKLOADS
+    from repro.dataflow import estimate
+
+    rows: List[Row] = []
+    for name, maker in WORKLOADS.items():
+        t0 = time.perf_counter()
+        m_int = build_flow(maker()).model
+        m_aff = build_flow(maker(), domain="affine").model
+        us = (time.perf_counter() - t0) * 1e6
+        acc_i = sum(r.sira_bits
+                    for r in m_int.metadata["accumulator_reports"])
+        acc_a = sum(r.sira_bits
+                    for r in m_aff.metadata["accumulator_reports"])
+        luts_i = estimate(m_int, widths="sira").luts
+        luts_a = estimate(m_aff, widths="sira").luts
+        rows.append((
+            f"t6b_{name}", us,
+            f"accbits={acc_i}->{acc_a}(saved={acc_i - acc_a});"
+            f"luts={luts_i:.0f}->{luts_a:.0f}"
+            f"(saved={luts_i - luts_a:.0f})"))
+    return rows
+
+
 # --------------------------------------------------------------- Table 7
 
 def t7_layer_tails() -> List[Row]:

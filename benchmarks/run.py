@@ -11,7 +11,8 @@ def main() -> None:
                                          t1_qat_scales, t3_worked_example,
                                          t4_elementwise_model,
                                          t5_dataflow_resources,
-                                         t6_workloads, t7_layer_tails)
+                                         t6_workloads, t6b_domains,
+                                         t7_layer_tails)
     from benchmarks.kernels_bench import kernel_benchmarks
 
     suites = [
@@ -20,6 +21,7 @@ def main() -> None:
         ("t4", t4_elementwise_model),
         ("t5", t5_dataflow_resources),
         ("t6", t6_workloads),
+        ("t6b", t6b_domains),
         ("t7", t7_layer_tails),
         ("f22", f22_accumulators),
         ("f23", f23_crossover),

@@ -47,9 +47,43 @@ def arch_report(args) -> None:
           f"multithreshold tail (1 HBM pass)")
 
 
+def verification_report(model) -> None:
+    """Surface the verify_ranges containment/coverage artifacts
+    (``--verify``): violations, per-tensor range coverage, and channels
+    SIRA proves stuck at a constant value."""
+    from repro.core import stuck_channels
+    rep = model.metadata.get("verification")
+    if rep is None:
+        print("\nverification: no report (no sample inputs available)")
+        return
+    print(f"\n=== range verification ({model.domain} domain) ===")
+    status = "PASS" if rep.contained else "FAIL"
+    print(f"containment: {status} "
+          f"({len(rep.observed)} tensors instrumented)")
+    for v in rep.violations[:10]:
+        print(f"  violation: {v}")
+    cov = sorted(rep.coverage.items(), key=lambda kv: kv[1])
+    if cov:
+        mean_cov = sum(c for _, c in cov) / len(cov)
+        print(f"coverage: mean {mean_cov:.0%} of proven width observed; "
+              f"loosest tensors:")
+        for name, c in cov[:5]:
+            lo, hi = rep.observed[name]
+            print(f"  {name:28s} {c:6.1%}  observed [{lo:.4g}, {hi:.4g}]")
+    n_stuck = 0
+    for t in model.graph.outputs:
+        if t in model.ranges:
+            mask = stuck_channels(model.ranges, t)
+            n_stuck += int(mask.sum())
+    if n_stuck:
+        print(f"stuck output channels (provably constant): {n_stuck}")
+
+
 def workload_report(args) -> None:
-    print(f"=== Dataflow DSE report: {args.workload} on {args.device} ===")
-    model = build_flow(WORKLOADS[args.workload]()).model
+    print(f"=== Dataflow DSE report: {args.workload} on {args.device} "
+          f"[{args.domain} domain] ===")
+    model = build_flow(WORKLOADS[args.workload](),
+                       domain=args.domain).model
     dfg = extract_dataflow(model)
     fold = search_folding(model, target_fps=args.target_fps,
                           device=args.device, dataflow_graph=dfg)
@@ -93,6 +127,9 @@ def workload_report(args) -> None:
     else:
         print(f"  infeasible — binding constraint: {fold.binding}")
 
+    if args.verify:
+        verification_report(model)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -104,6 +141,13 @@ def main() -> None:
     ap.add_argument("--target-fps", type=float, default=1000.0)
     ap.add_argument("--w-bits", type=int, default=4)
     ap.add_argument("--a-bits", type=int, default=4)
+    ap.add_argument("--domain", default="interval",
+                    choices=("interval", "affine"),
+                    help="range-analysis abstract domain (affine = "
+                         "zonotope reduced product, tighter bounds)")
+    ap.add_argument("--verify", action="store_true",
+                    help="print the verify_ranges containment/coverage "
+                         "report (workload reports only)")
     args = ap.parse_args()
 
     if args.workload:

@@ -104,6 +104,19 @@ RULES = {
             "tail_lut_ratio": ("estimate", None),
             "fold_fps": ("estimate", None),
             "max_fps": ("estimate", None),
+            # interval-vs-affine domain comparison: summed proven
+            # accumulator bits are structural (exact); the saved-bits /
+            # saved-LUT deltas carry the soundness-ordering claim as a
+            # hard floor — the affine reduced product may never prove
+            # *worse* than the interval domain (floor 0, strict <)
+            "acc_bits_sum_interval": ("exact", None),
+            "acc_bits_sum_affine": ("exact", None),
+            "affine_acc_bits_saved": ("ratio", 0.0),
+            "interval_luts_unfolded": ("estimate", None),
+            "affine_luts_unfolded": ("estimate", None),
+            "interval_dsps_unfolded": ("exact", None),
+            "affine_dsps_unfolded": ("exact", None),
+            "affine_luts_saved": ("ratio", 0.0),
             "seconds": ("timing", None),
         },
     },

@@ -9,12 +9,15 @@ The loose functions (``analyze``, ``streamline``,
 ``convert_tails_to_thresholds``, ``minimize_accumulators``,
 ``verify_ranges``) remain as deprecated shims over the pass pipeline.
 """
-from .intervals import ScaledIntRange                      # noqa: F401
+from .intervals import ScaledIntRange, InvalidRangeError   # noqa: F401
 from .ops import (OpDef, OP_REGISTRY, register_op, get_op,  # noqa: F401
-                  EXEC_REGISTRY, PROP_REGISTRY, COST_REGISTRY)
+                  EXEC_REGISTRY, PROP_REGISTRY, COST_REGISTRY,
+                  AFFINE_REGISTRY)
 from .graph import Graph, Node, quant_bounds               # noqa: F401
 from .propagate import (SIRA, analyze, analysis_calls,     # noqa: F401
-                        POISON)
+                        POISON, DOMAINS)
+from .affine import (AffineForm, tighten_range,            # noqa: F401
+                     fresh_symbol)
 from .model import SiraModel                               # noqa: F401
 from .streamline import (streamline, aggregate_scales_biases,   # noqa: F401
                          explicitize_quantizers, remove_identity_ops,
@@ -31,7 +34,11 @@ from .passes import (Transformation, Fixpoint, Sequence,   # noqa: F401
                      DuplicateSharedConstants, AggregateScalesBiases,
                      RemoveIdentityOps, Streamline,
                      ConvertTailsToThresholds, MinimizeAccumulators,
-                     VerifyRanges, VerificationError)
+                     VerifyRanges, VerificationError, LintGraph)
+from .lint import (lint_graph, LintReport, LintFinding,    # noqa: F401
+                   LintError)
+from .fuzz import (run_fuzz, check_containment,            # noqa: F401
+                   random_graph, FuzzReport)
 from .lower import (lower, CompiledSiraModel, CompileBackend,  # noqa: F401
                     LoweringError)
 from .flow import (BuildConfig, BuildResult, StepReport,   # noqa: F401

@@ -25,7 +25,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .graph import Graph
-from .intervals import ScaledIntRange
+from .intervals import InvalidRangeError, ScaledIntRange
 from .propagate import analyze
 
 
@@ -135,7 +135,7 @@ def minimize_accumulators(g: Graph,
                 if np.min(r.int_lo) >= 0:
                     return r.required_unsigned_bits(), False
                 return r.required_signed_bits(), True
-            except AssertionError:
+            except InvalidRangeError:
                 return (input_bits, signed_default)
         dyn = rs_in[0] if not rs_in[0].is_point else rs_in[1]
         wgt = rs_in[1] if not rs_in[1].is_point else rs_in[0]

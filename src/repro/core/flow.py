@@ -58,6 +58,12 @@ class BuildConfig:
     verify_samples: int = 3
     seed: int = 0
     strict_verify: bool = True
+    # abstract domain for range analysis: "interval" (paper default) or
+    # "affine" (zonotope reduced product, repro.core.affine)
+    domain: str = "interval"
+    # pre-flow graph lint (repro.core.lint); "strict" raises LintError on
+    # errors, "warn" records the report under metadata['lint'], "off" skips
+    lint: str = "strict"
     # dataflow DSE steps (step_dataflow_estimate / step_dataflow_fold):
     # None -> unfolded estimate; DataflowFold then targets 30 FPS
     device: str = "pynq-z1"
@@ -133,6 +139,15 @@ register_step("minimize_accumulators")(
 register_step("verify_ranges")(
     lambda cfg: VerifyRanges(samples=cfg.verify_samples, seed=cfg.seed,
                              strict=cfg.strict_verify))
+
+
+def _step_lint(cfg: "BuildConfig"):
+    from .passes import LintGraph
+    return LintGraph(strict=cfg.lint != "warn")
+
+
+# explicit mid-flow lint (build_flow always pre-lints unless lint="off")
+register_step("lint_graph")(_step_lint)
 # lower to the compiled Pallas-kernel backend (result under
 # metadata['compiled']); optional — append to cfg.steps to enable, e.g.
 #   build_flow(wl, steps=list(DEFAULT_STEPS) + ["step_compile"])
@@ -178,14 +193,18 @@ def resolve_step(step: Step, cfg: BuildConfig) -> Transformation:
 # driver
 # --------------------------------------------------------------------------
 
-def _as_model(model) -> SiraModel:
+def _as_model(model, domain: str = "interval") -> SiraModel:
     if isinstance(model, SiraModel):
-        return model.copy()
+        m = model.copy()
+        if domain != "interval" and m.domain != domain:
+            m.domain = domain
+            m.invalidate()
+        return m
     if isinstance(model, QNNWorkload):
-        return SiraModel.from_workload(model)
+        return SiraModel.from_workload(model, domain=domain)
     if isinstance(model, tuple) and len(model) == 2:
         graph, input_ranges = model
-        return SiraModel(graph.copy(), input_ranges)
+        return SiraModel(graph.copy(), input_ranges, domain=domain)
     raise TypeError(f"cannot build a SiraModel from {type(model).__name__}")
 
 
@@ -199,7 +218,18 @@ def build_flow(model, cfg: Optional[BuildConfig] = None,
         cfg = BuildConfig()
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
-    model = _as_model(model)
+    model = _as_model(model, domain=cfg.domain)
+
+    reports: List[StepReport] = []
+    if cfg.lint != "off":
+        from .passes import LintGraph
+        t0 = time.perf_counter()
+        model, _ = LintGraph(strict=cfg.lint == "strict").apply(model)
+        rep = model.metadata.get("lint")
+        reports.append(StepReport(
+            name="lint_graph", modified=False,
+            seconds=time.perf_counter() - t0, analysis_calls=0,
+            note=rep.summary() if rep is not None else ""))
 
     # reference data for per-step equivalence verification
     want_equiv = cfg.verify in ("equivalence", "full")
@@ -225,7 +255,6 @@ def build_flow(model, cfg: Optional[BuildConfig] = None,
             outs = model.execute(f)
             ref_outs.append([outs[o] for o in model.graph.outputs])
 
-    reports: List[StepReport] = []
     for step in cfg.steps:
         tx = resolve_step(step, cfg)
         calls0 = _prop.analysis_calls()

@@ -25,6 +25,16 @@ import numpy as np
 Array = np.ndarray
 
 
+class InvalidRangeError(ValueError):
+    """A range violates a soundness invariant (inverted interval, NaN
+    bound, non-positive scale, missing integer component).
+
+    Raised instead of a bare ``assert`` so the checks survive
+    ``python -O``; the graph linter (:mod:`repro.core.lint`) reuses it via
+    :meth:`ScaledIntRange.validate`.
+    """
+
+
 def _as_arr(x) -> Array:
     return np.asarray(x, dtype=np.float64)
 
@@ -51,7 +61,25 @@ class ScaledIntRange:
             object.__setattr__(self, "scale", _as_arr(self.scale))
         if self.bias is not None:
             object.__setattr__(self, "bias", _as_arr(self.bias))
-        assert np.all(self.lo <= self.hi + 1e-12), "inverted interval"
+        self.validate()
+
+    def validate(self) -> None:
+        """Re-check the soundness invariants, raising
+        :class:`InvalidRangeError` on violation.  Runs at construction;
+        the graph linter calls it again on declared ranges (which may
+        have been mutated or built by bypassing ``__init__``)."""
+        if np.any(np.isnan(self.lo)) or np.any(np.isnan(self.hi)):
+            raise InvalidRangeError("NaN range bound")
+        if not np.all(self.lo <= self.hi + 1e-12):
+            raise InvalidRangeError("inverted interval: lo > hi")
+        if self.int_lo is not None:
+            if self.int_hi is None or self.scale is None:
+                raise InvalidRangeError(
+                    "integer interval requires int_lo, int_hi and scale")
+            if not np.all(self.int_lo <= self.int_hi + 1e-12):
+                raise InvalidRangeError("inverted integer interval")
+        if self.scale is not None and not np.all(self.scale > 0):
+            raise InvalidRangeError("scales must be positive")
 
     # ------------------------------------------------------------------ api
     @property
@@ -82,7 +110,8 @@ class ScaledIntRange:
                         ) -> "ScaledIntRange":
         int_lo, int_hi = _as_arr(int_lo), _as_arr(int_hi)
         scale, bias = _as_arr(scale), _as_arr(bias)
-        assert np.all(scale > 0), "scales must be positive"
+        if not np.all(scale > 0):
+            raise InvalidRangeError("scales must be positive")
         lo = scale * int_lo + bias
         hi = scale * int_hi + bias
         return ScaledIntRange(lo=lo, hi=hi, int_lo=int_lo, int_hi=int_hi,
@@ -102,7 +131,8 @@ class ScaledIntRange:
 
             P = ceil(log2(max(|z_lo|, |z_hi| + 1))) + 1
         """
-        assert self.is_scaled_int, "no integer component"
+        if not self.is_scaled_int:
+            raise InvalidRangeError("no integer component")
         zmin = float(np.min(self.int_lo))
         zmax = float(np.max(self.int_hi))
         m = max(abs(zmin), abs(zmax) + 1.0)
@@ -111,7 +141,9 @@ class ScaledIntRange:
         return int(np.ceil(np.log2(m))) + 1
 
     def required_unsigned_bits(self) -> int:
-        assert self.is_scaled_int and np.min(self.int_lo) >= 0
+        if not self.is_scaled_int or np.min(self.int_lo) < 0:
+            raise InvalidRangeError(
+                "no unsigned integer component (missing or negative)")
         zmax = float(np.max(self.int_hi))
         if zmax <= 0:
             return 1

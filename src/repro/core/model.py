@@ -35,10 +35,14 @@ class SiraModel:
     def __init__(self, graph: Graph,
                  input_ranges: Dict[str, ScaledIntRange],
                  name: str = "",
-                 metadata: Optional[Dict[str, Any]] = None):
+                 metadata: Optional[Dict[str, Any]] = None,
+                 domain: str = "interval"):
         self.graph = graph
         self.input_ranges: Dict[str, ScaledIntRange] = dict(input_ranges)
         self.name = name
+        # abstract domain for the cached analysis: "interval" (paper) or
+        # "affine" (zonotope reduced product — see repro.core.affine)
+        self.domain = domain
         # free-form artifact store written by passes (threshold specs,
         # accumulator reports, verification reports, ...)
         self.metadata: Dict[str, Any] = dict(metadata or {})
@@ -47,17 +51,18 @@ class SiraModel:
 
     # ------------------------------------------------------------ construct
     @classmethod
-    def from_workload(cls, wl) -> "SiraModel":
+    def from_workload(cls, wl, domain: str = "interval") -> "SiraModel":
         """Wrap a :class:`~repro.core.workloads.QNNWorkload` (graph copied,
         so the workload object stays pristine)."""
         return cls(wl.graph.copy(), wl.input_range, name=wl.name,
                    metadata=dict(input_shape=wl.input_shape,
                                  weight_bits=wl.weight_bits,
-                                 act_bits=wl.act_bits))
+                                 act_bits=wl.act_bits),
+                   domain=domain)
 
     def copy(self) -> "SiraModel":
         m = SiraModel(self.graph.copy(), self.input_ranges, name=self.name,
-                      metadata=dict(self.metadata))
+                      metadata=dict(self.metadata), domain=self.domain)
         if self._ranges is not None and \
                 self._cache_version == self.graph.cache_key:
             # graph.copy() is semantics-preserving → the analysis carries over
@@ -72,7 +77,8 @@ class SiraModel:
         graph has been mutated since the last analysis."""
         if self._ranges is None or \
                 self._cache_version != self.graph.cache_key:
-            self._ranges = analyze(self.graph, self.input_ranges)
+            self._ranges = analyze(self.graph, self.input_ranges,
+                                   domain=self.domain)
             # analyze() toposorts, which may bump the version once
             self._cache_version = self.graph.cache_key
         return self._ranges

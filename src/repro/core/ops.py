@@ -31,6 +31,9 @@ class OpDef:
     op_type: str
     execute: Optional[Callable] = None      # (node, *arrays) -> array(s)
     propagate: Optional[Callable] = None    # (node, graph, ranges) -> range(s)
+    # affine-domain transfer: (node, graph, forms, ranges) -> form(s);
+    # ops without one fall back to a fresh form over the interval result
+    affine: Optional[Callable] = None
     cost: Optional[Dict[str, float]] = None  # analytical LUT coefficients
     # free-form metadata (e.g. is_nonlinear, absorbable) for transform passes
     attrs: Dict[str, object] = dataclasses.field(default_factory=dict)
@@ -50,6 +53,7 @@ def _ensure(op_type: str) -> OpDef:
 def register_op(op_type: str,
                 execute: Optional[Callable] = None,
                 propagate: Optional[Callable] = None,
+                affine: Optional[Callable] = None,
                 cost: Optional[Dict[str, float]] = None,
                 **attrs) -> OpDef:
     """Register (or extend) the definition of one op type.
@@ -62,6 +66,8 @@ def register_op(op_type: str,
         d.execute = execute
     if propagate is not None:
         d.propagate = propagate
+    if affine is not None:
+        d.affine = affine
     if cost is not None:
         d.cost = dict(cost)
     if attrs:
@@ -112,6 +118,7 @@ class RegistryView(MutableMapping):
 # legacy-compatible views (imported by graph.py / propagate.py / costmodel.py)
 EXEC_REGISTRY = RegistryView("execute")
 PROP_REGISTRY = RegistryView("propagate")
+AFFINE_REGISTRY = RegistryView("affine")
 COST_REGISTRY = RegistryView("cost")
 
 # Table 4 analytical LUT coefficients (LUT = alpha * f(n_i, n_p) * PE +

@@ -220,6 +220,37 @@ class MinimizeAccumulators(Transformation):
         return model, False
 
 
+class LintGraph(Transformation):
+    """Static well-formedness lint (:func:`repro.core.lint.lint_graph`).
+    Stores the :class:`~repro.core.lint.LintReport` under
+    ``metadata['lint']``; raises :class:`~repro.core.lint.LintError` when
+    ``strict`` and error-level findings exist.  Never modifies the graph.
+
+    Range validation covers the *declared input ranges* plus any cached
+    analysis — it deliberately does not force a fresh propagation, so the
+    lint stays runnable on graphs too malformed to analyze."""
+
+    def __init__(self, strict: bool = True,
+                 input_shapes: Optional[Dict[str, tuple]] = None):
+        self.strict = strict
+        self.input_shapes = input_shapes
+
+    def apply(self, model: SiraModel) -> TransformResult:
+        from .lint import LintError, lint_graph
+        shapes = self.input_shapes
+        if shapes is None:
+            shape = model.metadata.get("input_shape")
+            if shape is not None and len(model.graph.inputs) == 1:
+                shapes = {model.graph.inputs[0]: tuple(shape)}
+        cached = model.ranges if model.analysis_cached else None
+        report = lint_graph(model.graph, model.input_ranges,
+                            input_shapes=shapes, ranges=cached)
+        model.metadata["lint"] = report
+        if self.strict and not report.ok:
+            raise LintError(report)
+        return model, False
+
+
 class VerificationError(AssertionError):
     pass
 

@@ -49,16 +49,34 @@ def handler(*op_types: str):
     return deco
 
 
-class SIRA:
-    """Scaled-integer range analysis over a Graph (paper Listing 1)."""
+DOMAINS = ("interval", "affine")
 
-    def __init__(self, graph: Graph):
+
+class SIRA:
+    """Scaled-integer range analysis over a Graph (paper Listing 1).
+
+    ``domain="interval"`` (default) runs the paper's propagation.
+    ``domain="affine"`` runs a *reduced product* with the zonotope domain
+    of :mod:`repro.core.affine`: the interval handlers see affine-tightened
+    inputs and every output is intersected with the affine concretization,
+    so affine results are contained in interval results by construction.
+    """
+
+    def __init__(self, graph: Graph, domain: str = "interval"):
+        if domain not in DOMAINS:
+            raise ValueError(f"unknown domain {domain!r}; "
+                             f"expected one of {DOMAINS}")
         self.graph = graph
+        self.domain = domain
 
     def run(self, input_ranges: Dict[str, ScaledIntRange]
             ) -> Dict[str, ScaledIntRange]:
         global ANALYSIS_CALLS
         ANALYSIS_CALLS += 1
+        affine = self.domain == "affine"
+        if affine:
+            from .affine import affine_step, seed_forms
+            forms = seed_forms(self.graph, input_ranges)
         ranges: Dict[str, ScaledIntRange] = {}
         for name, val in self.graph.initializers.items():
             ranges[name] = ScaledIntRange.point(val)
@@ -77,14 +95,17 @@ class SIRA:
             outs = fn(node, self.graph, in_ranges)
             if not isinstance(outs, tuple):
                 outs = (outs,)
+            if affine:
+                outs = tuple(affine_step(node, self.graph, forms,
+                                         in_ranges, outs))
             for name, r in zip(node.outputs, outs):
                 ranges[name] = r
         return ranges
 
 
-def analyze(graph: Graph, input_ranges: Dict[str, ScaledIntRange]
-            ) -> Dict[str, ScaledIntRange]:
-    return SIRA(graph).run(input_ranges)
+def analyze(graph: Graph, input_ranges: Dict[str, ScaledIntRange],
+            domain: str = "interval") -> Dict[str, ScaledIntRange]:
+    return SIRA(graph, domain=domain).run(input_ranges)
 
 
 # --------------------------------------------------------------------------

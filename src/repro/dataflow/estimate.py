@@ -21,6 +21,7 @@ import numpy as np
 
 from ..core.accumulator import (AccumulatorReport, _dot_length,
                                 minimize_accumulators)
+from ..core.intervals import InvalidRangeError
 from ..core.model import SiraModel
 from .resources import (DeviceBudget, NodeModel, baseline_style,
                         cycles_per_frame, fifo_depth, fifo_resources,
@@ -95,7 +96,7 @@ def _range_bits(model: SiraModel, tensor: str, default: int = 32) -> int:
             bits = r.required_unsigned_bits()
         else:
             bits = r.required_signed_bits()
-    except AssertionError:
+    except InvalidRangeError:
         return default
     return max(1, min(int(bits), 32))
 

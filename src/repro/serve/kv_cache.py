@@ -122,15 +122,17 @@ def observe_block_inputs(model, params, token_batches: Iterable
 
 def derive_kv_spec(model, params, *, x_range: Tuple[float, float] = (-4., 4.),
                    a_bits: int = 8, max_step: float = 0.5,
-                   calib_token_batches: Optional[Iterable] = None
-                   ) -> KVCacheSpec:
+                   calib_token_batches: Optional[Iterable] = None,
+                   domain: str = "interval") -> KVCacheSpec:
     """SIRA-derived per-layer/per-head int8 KV-cache scales.
 
     ``x_range`` is the assumed post-norm activation interval feeding the
     K/V projections (export.py convention); pass ``calib_token_batches``
     to replace it with per-layer observed ranges.  ``max_step`` is the
     fp-fallback threshold: a layer stays full-precision when its int8
-    resolution (amax / 127) would exceed it.
+    resolution (amax / 127) would exceed it.  ``domain`` selects the
+    range-analysis abstract domain ("interval" or "affine"); the affine
+    reduced product can only tighten the derived scales.
     """
     cfg = model.cfg
     KV, hd = cfg.n_kv_heads, cfg.hd
@@ -145,7 +147,7 @@ def derive_kv_spec(model, params, *, x_range: Tuple[float, float] = (-4., 4.),
         lo, hi = ranges[layer]
         g, inputs = export_kv_proj_graph(Wk, Wv, bk=bk, bv=bv,
                                          x_lo=lo, x_hi=hi, a_bits=a_bits)
-        r = analyze(g, inputs)
+        r = analyze(g, inputs, domain=domain)
 
         def head_amax(rng, rope: bool) -> np.ndarray:
             amax = np.maximum(np.abs(np.asarray(rng.lo)),

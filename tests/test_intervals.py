@@ -4,9 +4,9 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
-from repro.core.intervals import (ScaledIntRange, dot_interval,
-                                  dyn_dot_interval, monotonic_fn_interval,
-                                  mul_intervals)
+from repro.core.intervals import (InvalidRangeError, ScaledIntRange,
+                                  dot_interval, dyn_dot_interval,
+                                  monotonic_fn_interval, mul_intervals)
 
 
 def test_point_range_integer_detection():
@@ -94,3 +94,35 @@ def test_monotonic_fn_interval():
     lo, hi = monotonic_fn_interval(lambda x: -x, np.array(-2.0),
                                    np.array(3.0))
     assert np.isclose(lo, -3.0) and np.isclose(hi, 2.0)
+
+
+# --------------------------------------------------------------------------
+# invariant validation (InvalidRangeError instead of bare asserts)
+# --------------------------------------------------------------------------
+
+@given(st.floats(-1e6, 1e6), st.floats(-1e6, 1e6))
+@settings(max_examples=100, deadline=None)
+def test_inverted_bounds_always_rejected(a, b):
+    lo, hi = min(a, b), max(a, b)
+    r = ScaledIntRange(lo=np.asarray(lo), hi=np.asarray(hi))
+    r.validate()                                # valid order: never raises
+    if hi - lo > 1e-6:
+        with pytest.raises(InvalidRangeError):
+            ScaledIntRange(lo=np.asarray(hi), hi=np.asarray(lo))
+
+
+@given(st.integers(-1000, 1000), st.integers(0, 1000),
+       st.floats(1e-6, 1e3), st.floats(-1e3, 1e3))
+@settings(max_examples=100, deadline=None)
+def test_from_scaled_int_always_validates(q_lo, dq, scale, bias):
+    r = ScaledIntRange.from_scaled_int(q_lo, q_lo + dq, scale, bias)
+    r.validate()
+    np.testing.assert_allclose(r.lo, scale * q_lo + bias)
+    assert r.required_signed_bits() >= 1
+
+
+@given(st.floats(-1e3, 0, exclude_max=True))
+@settings(max_examples=50, deadline=None)
+def test_nonpositive_scale_always_rejected(scale):
+    with pytest.raises(InvalidRangeError):
+        ScaledIntRange.from_scaled_int(0, 10, scale)

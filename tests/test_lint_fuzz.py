@@ -1,0 +1,243 @@
+"""Graph linter (seeded malformed graphs) + soundness fuzzing harness +
+InvalidRangeError invariants (always-on, no optional deps)."""
+import numpy as np
+import pytest
+
+from repro.core import (Graph, InvalidRangeError, LintGraph, ScaledIntRange,
+                        SiraModel, build_flow)
+from repro.core.fuzz import check_containment, random_graph, run_fuzz
+from repro.core.lint import LintError, lint_graph
+from repro.core.workloads import WORKLOADS, make_tfc
+
+
+def _rules(report):
+    return {f.rule for f in report.findings}
+
+
+# --------------------------------------------------------------------------
+# InvalidRangeError invariants (satellite: asserts -> typed errors)
+# --------------------------------------------------------------------------
+
+def test_inverted_interval_raises():
+    with pytest.raises(InvalidRangeError, match="inverted"):
+        ScaledIntRange(lo=np.asarray(2.0), hi=np.asarray(1.0))
+
+
+def test_nan_bound_raises():
+    with pytest.raises(InvalidRangeError, match="NaN"):
+        ScaledIntRange(lo=np.asarray(np.nan), hi=np.asarray(1.0))
+
+
+def test_nonpositive_scale_raises():
+    with pytest.raises(InvalidRangeError, match="positive"):
+        ScaledIntRange.from_scaled_int(0, 10, scale=-0.5)
+    with pytest.raises(InvalidRangeError, match="positive"):
+        ScaledIntRange.from_scaled_int(0, 10, scale=0.0)
+
+
+def test_missing_integer_component_raises():
+    r = ScaledIntRange(lo=np.asarray(0.0), hi=np.asarray(1.0))
+    with pytest.raises(InvalidRangeError):
+        r.required_signed_bits()
+    with pytest.raises(InvalidRangeError):
+        r.required_unsigned_bits()
+    # InvalidRangeError is a ValueError, so legacy except-clauses survive
+    assert issubclass(InvalidRangeError, ValueError)
+
+
+# --------------------------------------------------------------------------
+# linter: seeded malformed graphs, node-level findings
+# --------------------------------------------------------------------------
+
+def _vec_range(n, lo=0.0, hi=1.0):
+    return ScaledIntRange(lo=np.full(n, lo), hi=np.full(n, hi))
+
+
+def test_lint_clean_graph_is_ok():
+    g = Graph(inputs=["x"], outputs=["y"])
+    c = g.add_initializer(np.ones(3), name="c")
+    g.add_node("Add", ["x", c], ["y"], name="add0")
+    rep = lint_graph(g, {"x": _vec_range(3)}, input_shapes={"x": (3,)})
+    assert rep.ok and not rep.findings
+
+
+def test_lint_dangling_tensor():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Add", ["x", "ghost"], ["y"], name="add0")
+    rep = lint_graph(g)
+    assert "dangling-input" in _rules(rep)
+    (f,) = [f for f in rep.errors if f.rule == "dangling-input"]
+    assert f.node == "add0" and "ghost" in f.message
+
+
+def test_lint_dangling_graph_output():
+    g = Graph(inputs=["x"], outputs=["never_made"])
+    g.add_node("Relu", ["x"], ["y"], name="r0")
+    rep = lint_graph(g)
+    assert "dangling-output" in _rules(rep)
+
+
+def test_lint_shape_mismatch_matmul():
+    g = Graph(inputs=["x"], outputs=["y"])
+    w = g.add_initializer(np.ones((4, 2)), name="W")
+    g.add_node("MatMul", ["x", w], ["y"], name="mm0")
+    rep = lint_graph(g, input_shapes={"x": (5,)})
+    (f,) = [f for f in rep.errors if f.rule == "contraction-mismatch"]
+    assert f.node == "mm0"
+
+
+def test_lint_conv_channels_and_groups():
+    g = Graph(inputs=["x"], outputs=["y"])
+    w = g.add_initializer(np.ones((6, 3, 3, 3)), name="W")
+    g.add_node("Conv", ["x", w], ["y"], name="conv0",
+               attrs=dict(groups=4))
+    rep = lint_graph(g, input_shapes={"x": (1, 8, 8, 8)})
+    assert "groups-mismatch" in _rules(rep)      # 4 does not divide 6
+    assert "channels-mismatch" in _rules(rep)    # 8 != 3*4
+
+
+def test_lint_broadcast_mismatch():
+    g = Graph(inputs=["x"], outputs=["y"])
+    c = g.add_initializer(np.ones(4), name="c")
+    g.add_node("Add", ["x", c], ["y"], name="add0")
+    rep = lint_graph(g, input_shapes={"x": (3,)})
+    (f,) = [f for f in rep.errors if f.rule == "broadcast-mismatch"]
+    assert f.node == "add0"
+
+
+def test_lint_threshold_table_checks():
+    g = Graph(inputs=["x"], outputs=["y"])
+    thr = g.add_initializer(np.array([[3.0, 1.0, 2.0]]), name="thr")
+    g.add_node("MultiThreshold", ["x", thr], ["y"], name="mt0")
+    rep = lint_graph(g)
+    assert "threshold-order" in _rules(rep)
+
+
+def test_lint_duplicate_producer_and_cycle():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Relu", ["x"], ["t"], name="r0")
+    g.add_node("Relu", ["x"], ["t"], name="r1")
+    rep = lint_graph(g)
+    assert "duplicate-producer" in _rules(rep)
+
+    g2 = Graph(inputs=["x"], outputs=["y"])
+    g2.add_node("Add", ["x", "b"], ["a"], name="n0")
+    g2.add_node("Relu", ["a"], ["b"], name="n1")
+    rep2 = lint_graph(g2)
+    assert "cycle" in _rules(rep2)
+
+
+def test_lint_inverted_declared_range():
+    r = ScaledIntRange(lo=np.asarray(0.0), hi=np.asarray(1.0))
+    object.__setattr__(r, "lo", np.asarray(2.0))   # corrupt post-hoc
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Relu", ["x"], ["y"], name="r0")
+    rep = lint_graph(g, {"x": r})
+    (f,) = [f for f in rep.errors if f.rule == "invalid-range"]
+    assert "inverted" in f.message
+
+
+def test_lint_stale_contribution_sources():
+    r = ScaledIntRange.from_scaled_int(
+        0, 10, 0.5, scale_src=frozenset({"not_an_initializer"}))
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Relu", ["x"], ["y"], name="r0")
+    rep = lint_graph(g, {"x": r})
+    assert "stale-contribution" in _rules(rep)
+
+
+def test_lint_unknown_op():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("FrobnicateOp", ["x"], ["y"], name="f0")
+    rep = lint_graph(g)
+    assert "no-handler" in _rules(rep)
+
+
+# --------------------------------------------------------------------------
+# LintGraph pass + build_flow integration
+# --------------------------------------------------------------------------
+
+def test_lintgraph_pass_strict_raises_and_records():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Add", ["x", "ghost"], ["y"], name="add0")
+    m = SiraModel(g, {"x": _vec_range(3)})
+    with pytest.raises(LintError, match="dangling-input"):
+        LintGraph(strict=True).apply(m)
+    m2, modified = LintGraph(strict=False).apply(m)
+    assert not modified and not m2.metadata["lint"].ok
+
+
+def test_build_flow_prelints():
+    wl = make_tfc()
+    res = build_flow(wl)
+    assert res.steps[0].name == "lint_graph"
+    assert res.model.metadata["lint"].ok
+
+    # a broken graph is rejected before any transform runs
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Add", ["x", "ghost"], ["y"])
+    m = SiraModel(g, {"x": _vec_range(3)})
+    with pytest.raises(LintError):
+        build_flow(m, steps=[])
+    res2 = build_flow(m, steps=[], lint="warn")
+    assert not res2.model.metadata["lint"].ok
+    res3 = build_flow(m, steps=[], lint="off")
+    assert "lint" not in res3.model.metadata
+
+
+def test_lint_all_workloads_clean():
+    for name, factory in WORKLOADS.items():
+        wl = factory()
+        rep = lint_graph(wl.graph, wl.input_range,
+                         input_shapes={wl.graph.inputs[0]: wl.input_shape})
+        assert rep.ok, f"{name}: {rep}"
+
+
+# --------------------------------------------------------------------------
+# soundness fuzzing
+# --------------------------------------------------------------------------
+
+def test_fuzz_random_graphs_no_violations():
+    rep = run_fuzz(n_random=12, n_samples=4, seed=7, workloads=False)
+    assert rep.graphs == 12 and rep.samples > 0
+    assert rep.ok, "\n".join(str(v) for v in rep.violations[:5])
+
+
+def test_fuzz_workloads_raw_and_optimized():
+    rep = run_fuzz(n_random=0, n_samples=4, workloads=True, optimized=True)
+    assert rep.graphs == 2 * len(WORKLOADS)
+    assert rep.ok, "\n".join(str(v) for v in rep.violations[:5])
+
+
+def test_fuzz_detects_seeded_unsoundness():
+    """The oracle itself must flag a deliberately broken analysis: feed a
+    graph whose declared input range is narrower than the sampling box."""
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.add_node("Relu", ["x"], ["y"])
+    wide = {"x": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
+    rep = check_containment(g, wide, (4,), n_samples=4,
+                            rng=np.random.default_rng(0))
+    assert rep.ok
+    # now lie to the analysis: claim [-2, 0] but sample from [-2, 2]
+    import repro.core.fuzz as fuzz_mod
+    r_lie = ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(0.0))
+    r_int = {"x": r_lie, "y": ScaledIntRange(lo=np.asarray(0.0),
+                                             hi=np.asarray(0.0))}
+    monkey = fuzz_mod.analyze
+    try:
+        fuzz_mod.analyze = lambda g_, ir_, domain="interval": dict(r_int)
+        rep2 = check_containment(g, wide, (4,), n_samples=8,
+                                 rng=np.random.default_rng(0))
+    finally:
+        fuzz_mod.analyze = monkey
+    assert not rep2.ok and any(v.kind == "interval"
+                               for v in rep2.violations)
+
+
+def test_random_graph_is_well_formed():
+    rng = np.random.default_rng(5)
+    for i in range(10):
+        g, in_ranges, shape = random_graph(rng, n_nodes=6)
+        rep = lint_graph(g, in_ranges,
+                         input_shapes={g.inputs[0]: shape})
+        assert rep.ok, f"random graph {i}: {rep}"

@@ -218,7 +218,8 @@ def test_build_flow_single_analysis_for_unmodified_prefix():
     full range propagation — O(1) analyses instead of O(N) passes."""
     result = build_flow(make_tfc())
     names = [s.name for s in result.steps]
-    assert names == ["ExplicitizeQuantizers", "AggregateScalesBiases",
+    assert names == ["lint_graph",
+                     "ExplicitizeQuantizers", "AggregateScalesBiases",
                      "ConvertTailsToThresholds", "MinimizeAccumulators",
                      "VerifyRanges"]
     last_mutating = max(i for i, s in enumerate(result.steps) if s.modified)
