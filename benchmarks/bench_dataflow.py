@@ -1,4 +1,5 @@
-"""Dataflow-accelerator DSE report over the four QNN workloads.
+"""Dataflow-accelerator DSE report over the QNN workloads (paper four +
+the hard-swish/Silu MLP exercising monotonicity certification).
 
 For each workload: run the default build flow, then the DSE subsystem —
 SIRA-vs-datatype-baseline resource estimates (same topology and folding;
@@ -24,13 +25,13 @@ import time
 
 def bench_workload(name: str, device: str, target_fps: float) -> dict:
     from repro.core import build_flow
-    from repro.core.workloads import WORKLOADS
+    from repro.core.workloads import ALL_WORKLOADS
     from repro.dataflow import (DeviceBudget, compare_sira_vs_baseline,
                                 estimate, extract_dataflow, max_throughput,
                                 search_folding)
 
     t0 = time.perf_counter()
-    model = build_flow(WORKLOADS[name]()).model
+    model = build_flow(ALL_WORKLOADS[name]()).model
     dfg = extract_dataflow(model)       # shared: extraction is pure
     fold = search_folding(model, target_fps=target_fps, device=device,
                           dataflow_graph=dfg)
@@ -47,7 +48,7 @@ def bench_workload(name: str, device: str, target_fps: float) -> dict:
     # LUT/DSP at a fixed (fully folded, PE=SIMD=1) design point.  The two
     # flows generate different fresh tensor names, so the affine model
     # gets its own extraction; node *counts* and totals stay comparable.
-    model_aff = build_flow(WORKLOADS[name](), domain="affine").model
+    model_aff = build_flow(ALL_WORKLOADS[name](), domain="affine").model
     acc_int = sum(r.sira_bits for r in
                   model.metadata["accumulator_reports"])
     acc_aff = sum(r.sira_bits for r in
@@ -57,6 +58,14 @@ def bench_workload(name: str, device: str, target_fps: float) -> dict:
     est_aff_unf = estimate(model_aff, widths="sira", device=device)
     seconds = time.perf_counter() - t0
 
+    # threshold-conversion outcomes: how many layer tails converted under
+    # a monotonicity certificate vs stayed elementwise (meta-kernel), and
+    # the certificate statuses that drove the decision
+    reports = model.metadata.get("tail_reports", [])
+    statuses: dict = {}
+    for r in reports:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+
     est = comp.sira
     return dict(
         workload=name,
@@ -65,6 +74,10 @@ def bench_workload(name: str, device: str, target_fps: float) -> dict:
         fifos=len(est.fifos),
         styles=est.style_counts(),
         baseline_styles=comp.baseline.style_counts(),
+        tails_total=len(reports),
+        tails_converted=sum(1 for r in reports if r.converted),
+        tails_meta_kernel=sum(1 for r in reports if not r.converted),
+        tail_certificates=statuses,
         mean_acc_bits_sira=round(comp.mean_acc_bits_sira, 4),
         mean_acc_bits_datatype=round(comp.mean_acc_bits_datatype, 4),
         acc_bits_reduction=round(comp.acc_bits_reduction, 4),
@@ -105,10 +118,10 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_dataflow.json")
     args = ap.parse_args()
 
-    from repro.core.workloads import WORKLOADS
+    from repro.core.workloads import ALL_WORKLOADS
 
     results = []
-    for name in WORKLOADS:
+    for name in ALL_WORKLOADS:
         row = bench_workload(name, args.device, args.target_fps)
         results.append(row)
         print(f"{name:10s} LUT {row['baseline_luts']:8.0f}→"
@@ -120,6 +133,8 @@ def main() -> None:
               f"fold@{args.target_fps:g}fps="
               f"{'ok' if row['fold_feasible'] else row['fold_binding']}  "
               f"tiny→{row['infeasible_binding']}  "
+              f"tails {row['tails_converted']}/{row['tails_total']}thr "
+              f"{row['tails_meta_kernel']}meta  "
               f"affine accΣ {row['acc_bits_sum_interval']}→"
               f"{row['acc_bits_sum_affine']}b", flush=True)
     payload = dict(device=args.device, target_fps=args.target_fps,

@@ -13,7 +13,7 @@ import argparse
 from repro.configs import get_config, list_archs
 from repro.core import (MinimizeAccumulators, SiraModel, Streamline,
                         build_flow, summarize)
-from repro.core.workloads import WORKLOADS
+from repro.core.workloads import ALL_WORKLOADS
 from repro.dataflow import (compare_sira_vs_baseline, extract_dataflow,
                             search_folding, select_tail_style, tail_cost)
 from repro.models.export import export_block_graph
@@ -82,8 +82,20 @@ def verification_report(model) -> None:
 def workload_report(args) -> None:
     print(f"=== Dataflow DSE report: {args.workload} on {args.device} "
           f"[{args.domain} domain] ===")
-    model = build_flow(WORKLOADS[args.workload](),
+    model = build_flow(ALL_WORKLOADS[args.workload](),
                        domain=args.domain).model
+
+    reports = model.metadata.get("tail_reports", [])
+    if reports:
+        print("\nthreshold conversion (monotonicity certificates):")
+        for r in reports:
+            if r.converted:
+                print(f"  {r.anchor:14s} converted  {r.status}/{r.method} "
+                      f"({r.n_ops} ops -> 1 MultiThreshold)")
+            else:
+                print(f"  {r.anchor:14s} kept chain uncertified: "
+                      f"{r.reason} -> meta-kernel pricing")
+
     dfg = extract_dataflow(model)
     fold = search_folding(model, target_fps=args.target_fps,
                           device=args.device, dataflow_graph=dfg)
@@ -134,7 +146,7 @@ def workload_report(args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
-    ap.add_argument("--workload", choices=sorted(WORKLOADS),
+    ap.add_argument("--workload", choices=sorted(ALL_WORKLOADS),
                     help="print the dataflow DSE per-node report for a "
                          "QNN workload instead of an LM-arch report")
     ap.add_argument("--device", default="pynq-z1")

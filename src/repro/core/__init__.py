@@ -12,7 +12,7 @@ The loose functions (``analyze``, ``streamline``,
 from .intervals import ScaledIntRange, InvalidRangeError   # noqa: F401
 from .ops import (OpDef, OP_REGISTRY, register_op, get_op,  # noqa: F401
                   EXEC_REGISTRY, PROP_REGISTRY, COST_REGISTRY,
-                  AFFINE_REGISTRY)
+                  AFFINE_REGISTRY, MONOTONE_REGISTRY)
 from .graph import Graph, Node, quant_bounds               # noqa: F401
 from .propagate import (SIRA, analyze, analysis_calls,     # noqa: F401
                         POISON, DOMAINS)
@@ -22,8 +22,12 @@ from .model import SiraModel                               # noqa: F401
 from .streamline import (streamline, aggregate_scales_biases,   # noqa: F401
                          explicitize_quantizers, remove_identity_ops,
                          AggregationResult)
+from .monotone import (MonotoneCertificate, MonotoneStep,  # noqa: F401
+                       certify_tail, compose_direction)
 from .thresholds import (convert_tails_to_thresholds,      # noqa: F401
-                         find_layer_tails, extract_thresholds)
+                         find_layer_tails, extract_thresholds,
+                         convert_tails, ThresholdConversionError,
+                         TailReport, ThresholdSpec)
 from .accumulator import (minimize_accumulators, datatype_bound_bits,  # noqa: F401
                           sira_bits, summarize, accumulator_dtype,
                           exact_worst_case_bits)
@@ -38,7 +42,8 @@ from .passes import (Transformation, Fixpoint, Sequence,   # noqa: F401
 from .lint import (lint_graph, LintReport, LintFinding,    # noqa: F401
                    LintError)
 from .fuzz import (run_fuzz, check_containment,            # noqa: F401
-                   random_graph, FuzzReport)
+                   random_graph, FuzzReport, run_tail_fuzz,
+                   check_tail_exactness, random_tail_graph)
 from .lower import (lower, CompiledSiraModel, CompileBackend,  # noqa: F401
                     LoweringError)
 from .flow import (BuildConfig, BuildResult, StepReport,   # noqa: F401

@@ -93,6 +93,10 @@ class BuildResult:
         return self.model.metadata.get("threshold_specs", [])
 
     @property
+    def tail_reports(self):
+        return self.model.metadata.get("tail_reports", [])
+
+    @property
     def accumulator_reports(self):
         return self.model.metadata.get("accumulator_reports", [])
 

@@ -20,7 +20,7 @@ gates on zero violations.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -204,6 +204,187 @@ def check_containment(graph: Graph,
 
 def _hull_pair(r: ScaledIntRange) -> Tuple[float, float]:
     return float(np.min(r.lo)), float(np.max(r.hi))
+
+
+# --------------------------------------------------------------------------
+# differential tail-conversion fuzzing
+# --------------------------------------------------------------------------
+
+_TAIL_ACTS = ["Silu", "Gelu", "Relu", "Tanh", "Sigmoid", "HardSwish",
+              "Abs"]
+
+
+def random_tail_graph(rng: np.random.Generator
+                      ) -> Tuple[Graph, Dict[str, ScaledIntRange], int]:
+    """A random elementwise chain (incl. Silu/Gelu/Clip, negative and
+    per-channel scales) terminated in a Quant — the exact shape
+    threshold conversion consumes.  Returns ``(graph, input_ranges, C)``
+    with an integer (scale-1, bias-0) input range."""
+    C = int(rng.integers(1, 5))
+    lo = int(rng.integers(-200, 1))
+    hi = lo + int(rng.integers(32, 320))
+    g = Graph(inputs=["x"], outputs=["y"])
+    cur = "x"
+    idx = 0
+
+    def emit(op: str, const: Optional[np.ndarray] = None,
+             extra: Optional[List[str]] = None) -> None:
+        nonlocal cur, idx
+        ins = [cur]
+        if const is not None:
+            ins.append(g.add_initializer(np.asarray(const, np.float64),
+                                         name=f"c{idx}"))
+        ins.extend(extra or [])
+        out = f"t{idx}"
+        idx += 1
+        g.add_node(op, ins, [out])
+        cur = out
+
+    # scale the integer range into activation-relevant territory;
+    # sometimes negative (direction reversal), sometimes per-channel
+    s0 = rng.uniform(0.01, 0.08, size=(C,)) * np.where(
+        rng.random(C) < 0.25, -1.0, 1.0)
+    if rng.random() < 0.5:
+        s0 = np.full(C, s0[0])
+    emit("Mul", s0)
+    for _ in range(int(rng.integers(0, 3))):
+        op = str(rng.choice(["Add", "Sub", "Mul", "Div", "Clip"]
+                            + _TAIL_ACTS))
+        if op in ("Add", "Sub"):
+            emit(op, rng.uniform(-2.0, 2.0, size=(C,)))
+        elif op == "Mul":
+            emit(op, rng.uniform(-1.5, 1.5, size=(C,)))
+        elif op == "Div":
+            c = rng.uniform(-2.0, 2.0, size=(C,))
+            emit(op, np.sign(c) * np.maximum(np.abs(c), 0.5))
+        elif op == "Clip":
+            a = float(rng.uniform(-2.0, 0.0))
+            b = a + float(rng.uniform(0.5, 3.0))
+            nlo = g.add_initializer(np.asarray(a), name=f"cl{idx}")
+            nhi = g.add_initializer(np.asarray(b), name=f"ch{idx}")
+            emit("Clip", None, [nlo, nhi])
+        else:
+            emit(op)
+    if rng.random() < 0.7:
+        emit(str(rng.choice(_TAIL_ACTS)))
+    bits = int(rng.integers(2, 6))
+    signed = int(rng.random() < 0.7)
+    for nm, v in (("qs", float(rng.uniform(0.05, 0.5))),
+                  ("qz", 0.0), ("qb", float(bits))):
+        g.initializers[nm] = np.asarray(v, np.float64)
+    g.add_node("Quant", [cur, "qs", "qz", "qb"], ["y"],
+               attrs=dict(signed=signed, narrow=0))
+    input_ranges = {"x": ScaledIntRange.from_scaled_int(
+        np.full(C, float(lo)), np.full(C, float(hi)), 1.0, 0.0)}
+    return g, input_ranges, C
+
+
+def check_tail_exactness(
+        g: Graph, ranges: Dict[str, ScaledIntRange],
+        method: str = "auto", name: str = "graph",
+        certifier: Optional[Callable] = None,
+        max_exhaustive: int = 1 << 16) -> FuzzReport:
+    """Differential oracle for threshold conversion (Eq. 3 exactness).
+
+    For every layer tail that converts, re-evaluates the *original* tail
+    subgraph over the proven integer grid (exhaustively up to
+    ``max_exhaustive`` points, endpoint-anchored sampling beyond) and
+    compares against the emitted MultiThreshold function.  The oracle
+    never consults the certificate for the comparison itself, so a lying
+    certifier (``certifier=...`` seeds one) that tricks the extractor
+    into bad thresholds is caught here."""
+    from . import monotone as _monotone
+    from .thresholds import (ThresholdConversionError, _entry_int_bounds,
+                             extract_thresholds, find_layer_tails,
+                             tail_evaluator)
+    rep = FuzzReport(graphs=1)
+    for tail in find_layer_tails(g, ranges):
+        cert = (certifier or _monotone.certify_tail)(g, tail, ranges)
+        try:
+            spec = extract_thresholds(g, tail, ranges, method=method,
+                                      certificate=cert)
+        except ThresholdConversionError:
+            continue    # left as an elementwise chain — safe
+        except ValueError:
+            continue
+        ev = tail_evaluator(g, tail, ranges)
+        r_in = ranges[tail.input_tensor]
+        lo_c, hi_c = _entry_int_bounds(r_in, ev.C)
+        lo, hi = int(lo_c.min()), int(hi_c.max())
+        if hi - lo + 1 <= max_exhaustive:
+            xs = np.arange(lo, hi + 1, dtype=np.int64)
+        else:
+            xs = np.unique(np.concatenate(
+                [np.array([lo, hi], np.int64),
+                 np.linspace(lo, hi, 4097).astype(np.int64)]))
+        ob = np.asarray(spec.out_bias, np.float64)
+        osc = np.asarray(spec.out_scale, np.float64)
+        rep.tensors_checked += 1
+        for start in range(0, xs.size, 8192):
+            blk = xs[start:start + 8192]
+            rep.samples += blk.size
+            ref = ev.s_q * (ev.f_int(blk) - ev.z_q)         # (R, C)
+            # entry-tensor values the MultiThreshold actually compares
+            x_real = (blk[:, None].astype(np.float64) * ev.in_scale
+                      + ev.in_bias)                         # (R, C)
+            cnt = (x_real[:, :, None]
+                   >= spec.thresholds[None]).sum(axis=-1)   # (R, C)
+            out = ob + osc * cnt
+            # the contract only covers each channel's own proven range
+            ok = (np.isclose(out, ref, rtol=1e-9, atol=1e-9)
+                  | (blk[:, None] < lo_c) | (blk[:, None] > hi_c))
+            if not ok.all():
+                bad = np.argwhere(~ok)
+                i, c = int(bad[0][0]), int(bad[0][1])
+                rep.violations.append(FuzzViolation(
+                    name, tail.quant_node.outputs[0], "tail-exact",
+                    f"x={int(blk[i])} ch={c}: thresholds give "
+                    f"{out[i, c]:.6g}, tail gives {ref[i, c]:.6g} "
+                    f"(certificate {cert.summary})"))
+                break
+    return rep
+
+
+def run_tail_fuzz(n_random: int = 40, seed: int = 0,
+                  method: str = "auto",
+                  certifier: Optional[Callable] = None) -> FuzzReport:
+    """Fuzz threshold conversion on random quantized tails: per-tail
+    differential exactness (:func:`check_tail_exactness`) plus a
+    whole-graph check that the converted graph matches the original over
+    the full integer grid."""
+    from .thresholds import convert_tails
+    rng = np.random.default_rng(seed)
+    total = FuzzReport()
+    for i in range(n_random):
+        g, in_ranges, C = random_tail_graph(rng)
+        ranges = analyze(g, in_ranges)
+        name = f"tail{i}"
+        total.merge(check_tail_exactness(g, ranges, method=method,
+                                         name=name, certifier=certifier))
+        # whole-graph differential: conversion must preserve execution
+        g2 = g.copy()
+        specs, _reports = convert_tails(g2, analyze(g2, in_ranges),
+                                        method=method)
+        if not specs:
+            continue
+        r_in = in_ranges["x"]
+        lo = int(np.floor(np.min(r_in.int_lo)))
+        hi = int(np.ceil(np.max(r_in.int_hi)))
+        xs = np.arange(lo, hi + 1, dtype=np.float64)
+        X = np.ascontiguousarray(
+            np.broadcast_to(xs[:, None], (xs.size, C)))
+        y0 = g.execute({"x": X})["y"]
+        y1 = g2.execute({"x": X})["y"]
+        total.samples += xs.size
+        total.tensors_checked += 1
+        if not np.allclose(y0, y1, rtol=1e-9, atol=1e-9):
+            bad = np.argwhere(~np.isclose(y0, y1, rtol=1e-9, atol=1e-9))
+            i0, c0 = int(bad[0][0]), int(bad[0][1])
+            total.violations.append(FuzzViolation(
+                name, "y", "tail-exact",
+                f"converted graph diverges at x={xs[i0]:.0f} ch={c0}: "
+                f"{y1[i0, c0]:.6g} != {y0[i0, c0]:.6g}"))
+    return total
 
 
 # --------------------------------------------------------------------------

@@ -369,6 +369,16 @@ def _exec_gelu(node, x):
     return 0.5 * x * (1.0 + erf(x / np.sqrt(2.0)))
 
 
+@executor("HardSwish")
+def _exec_hardswish(node, x):
+    return x * np.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+@executor("Abs")
+def _exec_abs(node, x):
+    return np.abs(x)
+
+
 @executor("Clip")
 def _exec_clip(node, x, lo=None, hi=None):
     lo = -np.inf if lo is None else lo

@@ -340,10 +340,31 @@ def _check_node_shapes(lt: _Linter, node: Node,
         return ins[0]
 
     if op in ("Identity", "Relu", "Clip", "Sigmoid", "Tanh", "Floor",
-              "Round", "Softcap", "Silu", "Gelu"):
+              "Round", "Softcap", "Silu", "Gelu", "HardSwish", "Abs"):
         return ins[0]
 
     return None     # unknown op / data-dependent shape (Reshape, Concat...)
+
+
+# --------------------------------------------------------------------------
+# threshold-conversion certificate checks
+# --------------------------------------------------------------------------
+
+def _check_certificates(lt: _Linter) -> None:
+    """Threshold conversions must carry a monotonicity certificate
+    (paper §4.1.3 exactness only holds for certified-monotone tails), and
+    tails the certifier rejected should be visible with their reason code
+    — the DSE prices those as elementwise meta-kernels."""
+    for n in lt.graph.nodes:
+        if n.op_type == "MultiThreshold" and "certificate" not in n.attrs:
+            lt.warn("uncertified-threshold", n.name,
+                    "MultiThreshold without a monotonicity certificate — "
+                    "Eq. 3 exactness is unverified for this conversion")
+        reason = n.attrs.get("unconverted_reason")
+        if reason is not None:
+            lt.warn("unconverted-tail", n.name,
+                    f"layer tail left unconverted ({reason}) — will be "
+                    f"priced as an elementwise meta-kernel")
 
 
 # --------------------------------------------------------------------------
@@ -391,6 +412,7 @@ def lint_graph(graph: Graph,
     """
     lt = _Linter(graph)
     _check_structure(lt)
+    _check_certificates(lt)
     _infer_shapes(lt, input_shapes)
     declared = dict(input_ranges or {})
     declared.update(ranges or {})

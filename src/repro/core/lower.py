@@ -502,11 +502,13 @@ class _Lowerer:
         C, N = thr.shape
         x_int = self._tensor_is_int(x_t)
         thr_int = _integral(thr)
-        if not (x_int and thr_int):
-            raise LoweringError(
-                f"MultiThreshold {node.name} needs an integer input and "
-                f"integral thresholds (got int={x_int}, thr_int={thr_int})")
-        thrT = jnp.asarray(thr.T, INT_DTYPE)               # (N, C)
+        # Integer fast path when both the input and the thresholds are
+        # integral; scaled-entry tails (thresholds in real units at grid
+        # midpoints, see core.thresholds) fall back to a float compare —
+        # the count is exact either way because the midpoint placement
+        # absorbs floating-point noise on the entry tensor.
+        int_cmp = x_int and thr_int
+        thrT = jnp.asarray(thr.T, INT_DTYPE if int_cmp else self.dtype)
         unit = bool(np.all(out_scale == 1.0))
         int_bias = _integral(out_bias) and out_bias.size == 1
         int_out = unit and int_bias
@@ -522,6 +524,8 @@ class _Lowerer:
             cx = xm.shape[-1]
             t = thrT if C == cx else jnp.broadcast_to(thrT, (N, cx))
             x2 = xm.reshape(-1, cx)
+            if not int_cmp and x2.dtype != t.dtype:
+                x2 = x2.astype(t.dtype)
             if int_out:
                 y2 = kops.multithreshold(x2, t, out_bias=ob,
                                          out_dtype=INT_DTYPE, **kargs)

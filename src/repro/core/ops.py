@@ -34,6 +34,9 @@ class OpDef:
     # affine-domain transfer: (node, graph, forms, ranges) -> form(s);
     # ops without one fall back to a fresh form over the interval result
     affine: Optional[Callable] = None
+    # monotonicity transfer: (node, graph, lo, hi) -> MonotoneStep | None;
+    # consumed by core.monotone to certify layer-tail threshold conversion
+    monotone: Optional[Callable] = None
     cost: Optional[Dict[str, float]] = None  # analytical LUT coefficients
     # free-form metadata (e.g. is_nonlinear, absorbable) for transform passes
     attrs: Dict[str, object] = dataclasses.field(default_factory=dict)
@@ -54,6 +57,7 @@ def register_op(op_type: str,
                 execute: Optional[Callable] = None,
                 propagate: Optional[Callable] = None,
                 affine: Optional[Callable] = None,
+                monotone: Optional[Callable] = None,
                 cost: Optional[Dict[str, float]] = None,
                 **attrs) -> OpDef:
     """Register (or extend) the definition of one op type.
@@ -68,6 +72,8 @@ def register_op(op_type: str,
         d.propagate = propagate
     if affine is not None:
         d.affine = affine
+    if monotone is not None:
+        d.monotone = monotone
     if cost is not None:
         d.cost = dict(cost)
     if attrs:
@@ -119,6 +125,7 @@ class RegistryView(MutableMapping):
 EXEC_REGISTRY = RegistryView("execute")
 PROP_REGISTRY = RegistryView("propagate")
 AFFINE_REGISTRY = RegistryView("affine")
+MONOTONE_REGISTRY = RegistryView("monotone")
 COST_REGISTRY = RegistryView("cost")
 
 # Table 4 analytical LUT coefficients (LUT = alpha * f(n_i, n_p) * PE +
@@ -130,3 +137,10 @@ register_op("Mul", cost=dict(alpha=1.18, beta=124))
 register_op("Add", cost=dict(alpha=2.0, beta=24))
 register_op("ToInt", cost=dict(alpha=4.2, beta=13))
 register_op("Max", cost=dict(alpha=4.0, beta=21))
+# Elementwise meta-kernel (FINN PR #1040 shape): a generic per-channel
+# lookup/evaluation unit pricing layer tails that the monotonicity
+# certifier could not convert to thresholds.  LUT = alpha*n_i*n_o*PE +
+# beta plus per-channel parameter memory; coefficients follow the Table-4
+# fitting style (beyond-paper, calibrated against the Mul/Add entries so
+# a meta-kernel is strictly costlier than a same-width multiplier).
+register_op("MetaKernel", cost=dict(alpha=2.6, beta=180))

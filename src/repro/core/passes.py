@@ -25,7 +25,7 @@ from .streamline import (aggregate_with_ranges,
                          duplicate_shared_constants_inplace,
                          explicitize_quantizers_inplace,
                          remove_identity_ops as _remove_identity_ops)
-from .thresholds import convert_tails_with_ranges
+from .thresholds import convert_tails
 from .verify import verify_ranges as _verify_ranges
 
 TransformResult = Tuple[SiraModel, bool]
@@ -188,15 +188,18 @@ class Streamline(Sequence):
 
 class ConvertTailsToThresholds(Transformation):
     """Collapse quantized layer tails into MultiThreshold nodes.  Stores the
-    extracted specs under ``metadata['threshold_specs']``."""
+    extracted specs under ``metadata['threshold_specs']`` and the per-tail
+    conversion outcomes (certificate status, reason codes for tails left
+    as elementwise chains) under ``metadata['tail_reports']``."""
 
     def __init__(self, method: str = "auto"):
         self.method = method
 
     def apply(self, model: SiraModel) -> TransformResult:
-        specs = convert_tails_with_ranges(model.graph, model.ranges,
-                                               method=self.method)
+        specs, reports = convert_tails(model.graph, model.ranges,
+                                       method=self.method)
         model.metadata["threshold_specs"] = specs
+        model.metadata["tail_reports"] = reports
         return model, bool(specs)
 
 

@@ -175,8 +175,21 @@ def _prop_multithreshold(node: Node, graph: Graph, rs: List[ScaledIntRange]):
         lo_c, hi_c = rx.lo, rx.hi
     cnt_lo = (lo_c[:, None] >= thr).sum(axis=-1).astype(np.float64)
     cnt_hi = (hi_c[:, None] >= thr).sum(axis=-1).astype(np.float64)
+    # certified-decreasing channels carry a negative out_scale; fold the
+    # sign into the integer component (out = b + |s| * (sign(s) * cnt)) so
+    # the scaled-int invariant (scale > 0) holds
+    scale = np.asarray(out_scale, np.float64)
+    if np.any(scale <= 0):
+        if np.any(scale == 0):
+            lo = out_bias + np.minimum(scale * cnt_lo, scale * cnt_hi)
+            hi = out_bias + np.maximum(scale * cnt_lo, scale * cnt_hi)
+            return ScaledIntRange(lo=lo, hi=hi)
+        neg = scale < 0
+        cnt_lo, cnt_hi = (np.where(neg, -cnt_hi, cnt_lo),
+                          np.where(neg, -cnt_lo, cnt_hi))
+        scale = np.abs(scale)
     return ScaledIntRange.from_scaled_int(
-        cnt_lo, cnt_hi, np.asarray(out_scale), np.asarray(out_bias))
+        cnt_lo, cnt_hi, scale, np.asarray(out_bias))
 
 
 # --------------------------------------------------------------------------
@@ -506,9 +519,15 @@ def _gelu(x):
     return 0.5 * x * (1.0 + erf(x / np.sqrt(2.0)))
 
 
+def _hardswish(x):
+    return x * np.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
 PROP_REGISTRY["Silu"] = _unimodal(lambda x: x / (1.0 + np.exp(-x)),
                                   -1.2784645)
 PROP_REGISTRY["Gelu"] = _unimodal(_gelu, -0.75179)
+PROP_REGISTRY["HardSwish"] = _unimodal(_hardswish, -1.5)
+PROP_REGISTRY["Abs"] = _unimodal(np.abs, 0.0)
 
 
 @handler("Clip")

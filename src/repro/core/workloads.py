@@ -211,12 +211,76 @@ def make_mnv1(wbits: int = 4, abits: int = 4, ch: int = 8,
                        (1, 3, img, img), wbits, abits)
 
 
+def make_hsw(wbits: int = 3, abits: int = 4, width: int = 48,
+             in_dim: int = 16, seed: int = 7) -> QNNWorkload:
+    """HSW: hard-swish/Silu MLP — the non-ReLU threshold-conversion
+    stressor (beyond the paper's ReLU-only workloads).
+
+    Layer tails exercise every certificate outcome:
+      * fc1 ends in Silu + *unsigned* Quant: the proven range straddles
+        the stationary point (x* ≈ −1.28) so transfer composition cannot
+        decide, but the quantized output is monotone (the dip saturates
+        at level 0) — certified by the on-grid fallback;
+      * fc2 ends in Tanh behind a mixed-sign BatchNorm multiplier:
+        per-channel reversed directions, certified ``representable`` by
+        transfer composition (signed per-channel out_scale);
+      * fc3 ends in hard-swish + *signed* fine-grained Quant: the dip
+        around x* = −1.5 is resolved by the quantizer — uncertifiable,
+        left as an elementwise chain for meta-kernel pricing.
+    """
+    rng = np.random.default_rng(seed)
+    g = Graph(inputs=["X"], outputs=[])
+    x = _quant(g, "X", 1.0 / 127, 8, 0, "Xq")
+
+    def layer(x: str, k: int, m: int, act: str, prefix: str,
+              signed_act: int, mixed_bn: bool = False) -> str:
+        W = rng.normal(size=(k, m)) * (1.5 / np.sqrt(k))
+        w_name = g.add_initializer(W, f"{prefix}_W")
+        s_w = np.abs(W).max(axis=0) / (2 ** (wbits - 1) - 1)
+        wq = _quant(g, w_name, np.maximum(s_w, 1e-8), wbits, 1,
+                    f"{prefix}_Wq")
+        g.add_node("MatMul", [x, wq], [f"{prefix}_mm"])
+        b_name = g.add_initializer(rng.normal(size=(m,)) * 0.1,
+                                   f"{prefix}_B")
+        g.add_node("Add", [f"{prefix}_mm", b_name], [f"{prefix}_gemm"])
+        mvals = np.abs(rng.normal(size=(m,))) * 0.5 + 0.05
+        if mixed_bn:
+            mvals = mvals * np.where(np.arange(m) % 3 == 0, -1.0, 1.0)
+        mn = g.add_initializer(mvals, f"{prefix}_M")
+        nn = g.add_initializer(rng.normal(size=(m,)) * 0.2, f"{prefix}_N")
+        g.add_node("Mul", [f"{prefix}_gemm", mn], [f"{prefix}_bnm"])
+        g.add_node("Add", [f"{prefix}_bnm", nn], [f"{prefix}_bn"])
+        g.add_node(act, [f"{prefix}_bn"], [f"{prefix}_act"])
+        return _quant(g, f"{prefix}_act", 0.11, abits, signed_act,
+                      f"{prefix}_out")
+
+    x = layer(x, in_dim, width, "Silu", "fc1", signed_act=0)
+    x = layer(x, width, width, "Tanh", "fc2", signed_act=1, mixed_bn=True)
+    x = layer(x, width, width, "HardSwish", "fc3", signed_act=1)
+    x = _qlinear(g, rng, x, width, 10, wbits, abits, "head", final=True,
+                 bn=False)
+    g.outputs = [x]
+    return QNNWorkload("HSW-w%da%d" % (wbits, abits), g,
+                       {"X": ScaledIntRange(lo=np.zeros(()), hi=np.ones(()))},
+                       (1, in_dim), wbits, abits)
+
+
 WORKLOADS = {
     "TFC-w2a2": make_tfc,
     "CNV-w2a2": make_cnv,
     "RN8-w3a3": make_rn8,
     "MNv1-w4a4": make_mnv1,
 }
+
+# non-ReLU variants kept out of WORKLOADS: the paper's Table 5/6
+# reproductions (and the compiled-backend bit-exactness suite) iterate the
+# four paper networks; benchmarks and threshold-conversion tests iterate
+# ALL_WORKLOADS.
+EXTRA_WORKLOADS = {
+    "HSW-w3a4": make_hsw,
+}
+
+ALL_WORKLOADS = {**WORKLOADS, **EXTRA_WORKLOADS}
 
 
 def make_all(**kw) -> List[QNNWorkload]:

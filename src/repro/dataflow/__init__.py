@@ -19,15 +19,16 @@ FPGA dataflow accelerator; this package turns an analyzed
 """
 from .costmodel import (ELEMENTWISE_COEFFS, TailCost, lut_add,  # noqa: F401
                         lut_composite_compute, lut_composite_memory,
-                        lut_composite_total, lut_max, lut_mul,
-                        lut_threshold_compute, lut_threshold_memory,
-                        lut_threshold_total, lut_toint, n_thresholds,
-                        select_tail_style, tail_cost, tpu_tail_bytes)
+                        lut_composite_total, lut_max, lut_meta_kernel,
+                        lut_mul, lut_threshold_compute,
+                        lut_threshold_memory, lut_threshold_total,
+                        lut_toint, n_thresholds, select_tail_style,
+                        tail_cost, tpu_tail_bytes)
 from .resources import (DEVICES, DeviceBudget, NodeModel,      # noqa: F401
-                        Resources, baseline_style, cycles_per_frame,
-                        fifo_depth, fifo_resources, fold_options,
-                        get_device, node_resources, node_styles,
-                        resource_score, select_style)
+                        NONLINEAR_ELEMENTWISE, Resources, baseline_style,
+                        cycles_per_frame, fifo_depth, fifo_resources,
+                        fold_options, get_device, node_resources,
+                        node_styles, resource_score, select_style)
 from .estimate import (DataflowComparison, DataflowGraph, Edge,  # noqa: F401
                        FifoEstimate, GraphEstimate, NodeEstimate,
                        compare_sira_vs_baseline, estimate,

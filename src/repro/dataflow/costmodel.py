@@ -42,6 +42,23 @@ def lut_max(n_i: int, pe: int) -> float:
     return c["alpha"] * n_i * pe + c["beta"]
 
 
+#: piecewise segments of the nonlinear elementwise meta-kernel
+META_KERNEL_SEGMENTS = 16
+
+
+def lut_meta_kernel(n_i: int, n_p: int, channels: int, pe: int) -> float:
+    """Nonlinear elementwise meta-kernel (FINN-style piecewise-linear
+    interpolator): per-PE segment-select comparators feeding one
+    fixed-point multiply-add, a shared slope/intercept segment table, and
+    the per-channel scale/bias parameter memory.  Strictly costlier than
+    a same-width ``Mul`` (alpha 2.6 vs 1.18) — this is the price of a
+    tail that could *not* be certified for threshold conversion."""
+    c = ELEMENTWISE_COEFFS["MetaKernel"]
+    compute = c["alpha"] * n_i * n_p * pe + c["beta"]
+    table = META_KERNEL_SEGMENTS * 2.0 * n_p / 64.0
+    return compute + table + lut_composite_memory(n_p, channels)
+
+
 # --------------------------------------------------------------------------
 # §5.4.2 composite layer tail:  Mul → Add → Max(ReLU) → Mul → ToInt
 # --------------------------------------------------------------------------

@@ -181,7 +181,9 @@ def extract_dataflow(model: SiraModel,
             nm = NodeModel(name=node.name, op_type=node.op_type,
                            kind="threshold", pixels=pixels,
                            channels=int(C), in_bits=in_bits, out_bits=n_o,
-                           in_elems=in_elems)
+                           in_elems=in_elems,
+                           certificate=str(node.attrs.get("certificate",
+                                                          "")))
         elif node.op_type in ("MaxPool", "AveragePool",
                               "GlobalAveragePool"):
             pixels, channels = _channel_geometry(out_shape, axis)
@@ -204,10 +206,13 @@ def extract_dataflow(model: SiraModel,
                            in_elems=in_elems)
         else:                           # elementwise (Table 4 meta-kernel)
             pixels, channels = _channel_geometry(out_shape, axis)
+            reason = str(node.attrs.get("meta_kernel_reason")
+                         or node.attrs.get("unconverted_reason") or "")
             nm = NodeModel(name=node.name, op_type=node.op_type,
                            kind="elementwise", pixels=pixels,
                            channels=channels, in_bits=in_bits,
-                           out_bits=out_bits, in_elems=in_elems)
+                           out_bits=out_bits, in_elems=in_elems,
+                           reason=reason)
         nodes.append(nm)
         for t in dyn:
             src = resolve(t)

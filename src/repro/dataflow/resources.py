@@ -31,7 +31,8 @@ import math
 from typing import Dict, List, Tuple, Union
 
 from .costmodel import (lut_add, lut_composite_memory, lut_composite_total,
-                        lut_max, lut_mul, lut_threshold_total, lut_toint)
+                        lut_max, lut_meta_kernel, lut_mul,
+                        lut_threshold_total, lut_toint)
 
 # ------------------------------------------------------------------ devices
 
@@ -111,6 +112,11 @@ class Resources:
 #: node kinds priced by this module
 KINDS = ("mvau", "threshold", "elementwise", "pool", "toint")
 
+#: elementwise ops with no exact composite (Mul/Add/Max) decomposition —
+#: they need the piecewise meta-kernel unless threshold-converted
+NONLINEAR_ELEMENTWISE = {"Sigmoid", "Tanh", "Silu", "Gelu", "Softcap",
+                         "HardSwish", "Abs"}
+
 
 @dataclasses.dataclass
 class NodeModel:
@@ -134,6 +140,8 @@ class NodeModel:
     acc_bits: int = 32       # mvau accumulator width
     param_bits: int = PARAM_BITS
     in_elems: int = 0        # dynamic input elements per frame
+    reason: str = ""         # why an elementwise tail stayed unconverted
+    certificate: str = ""    # monotonicity certificate (threshold kind)
 
     @property
     def out_elems(self) -> int:
@@ -169,9 +177,21 @@ def node_styles(node: NodeModel) -> List[str]:
     if node.kind == "mvau":
         return ["lut_mac", "dsp_mac"]
     if node.kind == "threshold":
+        # a certificate other than plain monotone:transfer means the
+        # original tail was not an affine+ReLU composite shape (grid
+        # certification or mixed per-channel directions) — re-expanding
+        # it needs the meta-kernel, not the composite chain
+        if node.certificate and node.certificate != "monotone:transfer":
+            return ["thresholding", "meta_kernel"]
         return ["thresholding", "composite", "dsp_mac"]
-    if node.kind == "elementwise" and node.op_type in ("Mul", "Div"):
-        return ["composite", "dsp_mac"]
+    if node.kind == "elementwise":
+        # an uncertifiable tail (machine-readable reason from the
+        # monotonicity certifier) or an intrinsically nonlinear op has no
+        # exact composite form — only the meta-kernel implements it
+        if node.reason or node.op_type in NONLINEAR_ELEMENTWISE:
+            return ["meta_kernel"]
+        if node.op_type in ("Mul", "Div"):
+            return ["composite", "dsp_mac"]
     return ["composite"]
 
 
@@ -202,6 +222,9 @@ def node_resources(node: NodeModel, style: str, pe: int = 1,
     if node.kind == "threshold":
         if style == "thresholding":
             r.luts = lut_threshold_total(n_i, n_o, node.channels, pe)
+        elif style == "meta_kernel":
+            r.luts = lut_meta_kernel(n_i, node.param_bits,
+                                     node.channels, pe)
         elif style == "composite":
             r.luts = lut_composite_total(n_i, node.param_bits,
                                          node.channels, pe)
@@ -225,6 +248,9 @@ def node_resources(node: NodeModel, style: str, pe: int = 1,
         return r
     # elementwise (Table 4 meta-kernels)
     op = node.op_type
+    if style == "meta_kernel":
+        r.luts = lut_meta_kernel(n_i, node.param_bits, node.channels, pe)
+        return r
     if style == "dsp_mac" and op in ("Mul", "Div"):
         r.dsps = pe
         r.luts = pe * 4.0 + node.channels * node.param_bits / 64.0
@@ -265,8 +291,18 @@ def select_style(node: NodeModel, pe: int = 1, simd: int = 1,
 def baseline_style(node: NodeModel) -> str:
     """Conservative no-SIRA style: every MAC on DSP slices, every tail as
     the composite elementwise chain (no proven ranges → no exact
-    threshold extraction)."""
-    return "dsp_mac" if node.kind == "mvau" else "composite"
+    threshold extraction); nonlinear elementwise ops need the meta-kernel
+    regardless of analysis."""
+    if node.kind == "mvau":
+        return "dsp_mac"
+    if node.kind == "elementwise" and \
+            node.op_type in NONLINEAR_ELEMENTWISE:
+        return "meta_kernel"
+    if node.kind == "threshold" and node.certificate and \
+            node.certificate != "monotone:transfer":
+        # no-SIRA baseline keeps the original (nonlinear) tail: meta-kernel
+        return "meta_kernel"
+    return "composite"
 
 
 # ------------------------------------------------------------------- FIFOs
@@ -303,7 +339,8 @@ def fifo_resources(depth: int, width_bits: int) -> Resources:
 
 __all__ = [
     "DeviceBudget", "DEVICES", "get_device", "Resources", "NodeModel",
-    "KINDS", "fold_options", "cycles_per_frame", "node_styles",
-    "node_resources", "resource_score", "select_style", "baseline_style",
-    "fifo_depth", "fifo_resources", "PARAM_BITS", "DSP_LUT_EQUIV",
+    "KINDS", "NONLINEAR_ELEMENTWISE", "fold_options", "cycles_per_frame",
+    "node_styles", "node_resources", "resource_score", "select_style",
+    "baseline_style", "fifo_depth", "fifo_resources", "PARAM_BITS",
+    "DSP_LUT_EQUIV",
 ]

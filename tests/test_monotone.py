@@ -1,0 +1,304 @@
+"""Monotonicity certification + certified threshold conversion.
+
+Covers the per-op transfer functions, the on-grid fallback, the
+certificate-gated extraction paths (bisection guard regression for Silu
+tails), the differential tail fuzzer with a seeded lying certifier, the
+lint rules, the meta-kernel style selection, and the hard-swish/Silu MLP
+workload end-to-end.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (MonotoneCertificate, SiraModel, ScaledIntRange,
+                        ThresholdConversionError, analyze, build_flow,
+                        certify_tail, compose_direction, convert_tails,
+                        lint_graph)
+from repro.core.flow import DATAFLOW_STEPS
+from repro.core.fuzz import check_tail_exactness, run_tail_fuzz
+from repro.core.graph import Graph
+from repro.core.passes import Streamline
+from repro.core.thresholds import (extract_thresholds, find_layer_tails,
+                                   tail_evaluator)
+from repro.core.workloads import ALL_WORKLOADS, WORKLOADS, make_hsw
+from repro.dataflow import compare_sira_vs_baseline
+from repro.dataflow.resources import (NodeModel, baseline_style,
+                                      node_styles, select_style)
+
+
+# --------------------------------------------------------------- helpers
+
+def tail_graph(ops, bits=4, signed=1, qscale=0.1, lo=-100, hi=100, C=1):
+    """A chain of (op, const-or-None) pairs terminated in a Quant, with an
+    integer scale-1 input range [lo, hi] on every channel."""
+    g = Graph(inputs=["x"], outputs=["y"])
+    cur = "x"
+    for i, (op, const) in enumerate(ops):
+        ins = [cur]
+        if const is not None:
+            ins.append(g.add_initializer(
+                np.asarray(const, np.float64), name=f"c{i}"))
+        out = f"t{i}"
+        g.add_node(op, ins, [out])
+        cur = out
+    for nm, v in (("qs", qscale), ("qz", 0.0), ("qb", float(bits))):
+        g.initializers[nm] = np.asarray(v, np.float64)
+    g.add_node("Quant", [cur, "qs", "qz", "qb"], ["y"],
+               attrs=dict(signed=signed, narrow=0))
+    ranges = analyze(g, {"x": ScaledIntRange.from_scaled_int(
+        np.full(C, float(lo)), np.full(C, float(hi)), 1.0, 0.0)})
+    (tail,) = find_layer_tails(g, ranges)
+    return g, ranges, tail
+
+
+# ------------------------------------------------- transfer-function units
+
+def test_compose_direction_sign_algebra():
+    d = np.array([1.0, -1.0, 1.0, np.nan])
+    f = np.array([-1.0, -1.0, 0.0, 0.0])
+    out = compose_direction(d, f)
+    np.testing.assert_array_equal(out, [-1.0, 1.0, 0.0, 0.0])
+    # NaN (unknown) propagates through non-zero factors
+    assert np.isnan(compose_direction(np.array([np.nan]),
+                                      np.array([1.0]))[0])
+
+
+def test_negative_mul_reverses_direction():
+    g, ranges, tail = tail_graph([("Mul", [-0.05]), ("Tanh", None)])
+    cert = certify_tail(g, tail, ranges)
+    assert cert.status == "monotone"
+    assert cert.method == "transfer"
+    assert cert.direction.tolist() == [-1]
+
+
+def test_mixed_sign_mul_is_representable():
+    g, ranges, tail = tail_graph([("Mul", [0.05, -0.05]), ("Tanh", None)],
+                                 C=2)
+    cert = certify_tail(g, tail, ranges)
+    assert cert.status == "representable"
+    assert cert.direction.tolist() == [1, -1]
+
+
+def test_clip_plateau_collapses_direction():
+    # range * 0.05 = [-5, 5] clipped from below at 10: constant output
+    g3 = Graph(inputs=["x"], outputs=["y"])
+    c = g3.add_initializer(np.asarray([0.05]), name="c0")
+    lo_t = g3.add_initializer(np.asarray(10.0), name="cl")
+    hi_t = g3.add_initializer(np.asarray(20.0), name="ch")
+    g3.add_node("Mul", ["x", c], ["t0"])
+    g3.add_node("Clip", ["t0", lo_t, hi_t], ["t1"])
+    for nm, v in (("qs", 0.1), ("qz", 0.0), ("qb", 4.0)):
+        g3.initializers[nm] = np.asarray(v, np.float64)
+    g3.add_node("Quant", ["t1", "qs", "qz", "qb"], ["y"],
+                attrs=dict(signed=1, narrow=0))
+    ranges3 = analyze(g3, {"x": ScaledIntRange.from_scaled_int(
+        np.full(1, -100.0), np.full(1, 100.0), 1.0, 0.0)})
+    (tail3,) = find_layer_tails(g3, ranges3)
+    cert = certify_tail(g3, tail3, ranges3)
+    assert cert.status == "monotone"
+    assert cert.direction.tolist() == [0]
+
+
+def test_silu_one_sided_certifies_by_transfer():
+    # 0.05 * [0, 100] = [0, 5]: entirely right of the Silu minimum
+    g, ranges, tail = tail_graph([("Mul", [0.05]), ("Silu", None)],
+                                 lo=0, hi=100)
+    cert = certify_tail(g, tail, ranges)
+    assert cert.status == "monotone"
+    assert cert.method == "transfer"
+    assert cert.direction.tolist() == [1]
+
+
+def test_silu_straddle_grid_fallback_decides():
+    # straddles x* = -1.28, but a coarse unsigned quantizer flattens the
+    # dip: the quantized staircase is monotone on the grid
+    g, ranges, tail = tail_graph([("Mul", [0.05]), ("Silu", None)],
+                                 bits=3, signed=0, qscale=0.7)
+    cert = certify_tail(g, tail, ranges)
+    assert cert.status == "monotone"
+    assert cert.method == "grid"
+
+
+def test_unknown_op_reports_reason():
+    g, ranges, tail = tail_graph([("Mul", [0.05]), ("Silu", None)])
+    # drop the Silu rule by spoofing an unknown op type
+    tail.nodes[1].op_type = "Mystery"
+    cert = certify_tail(g, tail, ranges)
+    assert not cert.certified
+    assert cert.reason == "no-monotone-rule:Mystery"
+
+
+# ------------------------------------------ certificate-gated extraction
+
+def test_silu_straddle_bisection_guard_regression():
+    """Regression (satellite 1): a Silu tail straddling x* ~ -1.28 with a
+    fine signed quantizer must be *refused*, not silently bisected into
+    wrong thresholds."""
+    g, ranges, tail = tail_graph([("Mul", [0.05]), ("Silu", None)],
+                                 bits=5, signed=1, qscale=0.01)
+    cert = certify_tail(g, tail, ranges)
+    assert cert.status == "uncertified"
+    assert cert.reason == "nonmonotone-on-grid"
+    for method in ("bisect", "edge", "auto"):
+        with pytest.raises(ThresholdConversionError) as ei:
+            extract_thresholds(g, tail, ranges, method=method)
+        assert ei.value.reason == "nonmonotone-on-grid"
+
+
+def test_decreasing_tail_converts_exactly_via_both_methods():
+    for method in ("edge", "bisect"):
+        g, ranges, tail = tail_graph([("Mul", [-0.05]), ("Tanh", None)])
+        spec = extract_thresholds(g, tail, ranges, method=method)
+        assert spec.direction.tolist() == [-1]
+        assert float(np.asarray(spec.out_scale).reshape(-1)[0]) < 0
+        rep = check_tail_exactness(g, ranges, method=method)
+        assert rep.tensors_checked == 1
+        assert rep.violations == []
+
+
+def test_uncertified_tail_marked_and_linted():
+    g, ranges, tail = tail_graph([("Mul", [0.05]), ("Silu", None)],
+                                 bits=5, signed=1, qscale=0.01)
+    specs, reports = convert_tails(g, ranges)
+    assert specs == []
+    (rep,) = reports
+    assert not rep.converted and rep.reason == "nonmonotone-on-grid"
+    assert tail.quant_node.attrs["unconverted_reason"] == \
+        "nonmonotone-on-grid"
+    assert all(n.attrs.get("meta_kernel_reason") == "nonmonotone-on-grid"
+               for n in tail.nodes[:-1])
+    lint = lint_graph(g, ranges=ranges)
+    assert any(f.rule == "unconverted-tail" for f in lint.findings)
+
+
+def test_lint_flags_missing_certificate():
+    g, ranges, tail = tail_graph([("Mul", [0.05]), ("Relu", None)])
+    specs, _ = convert_tails(g, ranges)
+    assert len(specs) == 1
+    (mt,) = [n for n in g.nodes if n.op_type == "MultiThreshold"]
+    assert mt.attrs["certificate"] == "monotone:transfer"
+    assert not any(f.rule == "uncertified-threshold"
+                   for f in lint_graph(g, ranges=ranges).findings)
+    del mt.attrs["certificate"]
+    assert any(f.rule == "uncertified-threshold"
+               for f in lint_graph(g, ranges=ranges).findings)
+
+
+# ----------------------------------------------------------- fuzz oracle
+
+def test_tail_fuzz_no_violations():
+    rep = run_tail_fuzz(n_random=25, seed=0)
+    assert rep.graphs >= 25
+    assert rep.tensors_checked > 0
+    assert rep.violations == []
+
+
+def test_tail_fuzz_catches_lying_certifier():
+    """Satellite 2: a certifier that always claims 'monotone increasing'
+    tricks the bisection extractor into wrong thresholds — the
+    differential oracle must catch it."""
+    from repro.core.thresholds import _tail_params_channels
+
+    def liar(g, tail, ranges):
+        C = _tail_params_channels(g, tail)
+        return MonotoneCertificate(status="monotone", method="transfer",
+                                   direction=np.ones(C, np.int64))
+
+    rep = run_tail_fuzz(n_random=25, seed=0, method="bisect",
+                        certifier=liar)
+    assert len(rep.violations) > 0
+    assert all(v.kind == "tail-exact" for v in rep.violations)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_WORKLOADS))
+def test_workload_tails_bit_exact_over_proven_range(name):
+    """Every converted tail on every workload matches the original chain
+    over the full proven integer grid (exhaustive <= 2^16 points)."""
+    m = SiraModel.from_workload(ALL_WORKLOADS[name]())
+    m, _ = Streamline().apply(m)
+    rep = check_tail_exactness(m.graph, m.ranges, name=name)
+    assert rep.tensors_checked >= 1
+    assert rep.violations == []
+
+
+# ----------------------------------------------------- meta-kernel pricing
+
+def test_select_style_meta_kernel_for_uncertified_tail():
+    nm = NodeModel(name="hsw", op_type="HardSwish", kind="elementwise",
+                   pixels=1, channels=32, in_bits=8, out_bits=8,
+                   reason="nonmonotone-on-grid")
+    assert node_styles(nm) == ["meta_kernel"]
+    assert select_style(nm) == "meta_kernel"
+    assert baseline_style(nm) == "meta_kernel"
+    # marked affine op from an uncertified tail: also meta-kernel only
+    nm2 = NodeModel(name="mul", op_type="Mul", kind="elementwise",
+                    pixels=1, channels=32, reason="grid-too-large:70000")
+    assert node_styles(nm2) == ["meta_kernel"]
+    # unmarked affine op keeps the cheap styles
+    nm3 = NodeModel(name="mul", op_type="Mul", kind="elementwise",
+                    pixels=1, channels=32)
+    assert "composite" in node_styles(nm3)
+
+
+def test_threshold_style_alternatives_follow_certificate():
+    base = dict(kind="threshold", pixels=1, channels=32, in_bits=12,
+                out_bits=4)
+    legacy = NodeModel(name="t", op_type="MultiThreshold", **base)
+    assert node_styles(legacy) == ["thresholding", "composite", "dsp_mac"]
+    relu = NodeModel(name="t", op_type="MultiThreshold",
+                     certificate="monotone:transfer", **base)
+    assert node_styles(relu) == ["thresholding", "composite", "dsp_mac"]
+    grid = NodeModel(name="t", op_type="MultiThreshold",
+                     certificate="monotone:grid", **base)
+    assert node_styles(grid) == ["thresholding", "meta_kernel"]
+    assert baseline_style(grid) == "meta_kernel"
+
+
+# ------------------------------------------------------- HSW end-to-end
+
+def test_hsw_workload_three_certificate_outcomes():
+    res = build_flow(SiraModel.from_workload(make_hsw()))
+    by_status = {}
+    for r in res.tail_reports:
+        by_status.setdefault((r.status, r.converted), []).append(r)
+    assert ("monotone", True) in by_status        # Silu layer converts
+    assert ("representable", True) in by_status   # mixed-sign Tanh layer
+    assert ("uncertified", False) in by_status    # hard-swish straddle
+    (unc,) = by_status[("uncertified", False)]
+    assert unc.reason == "nonmonotone-on-grid"
+
+
+def test_hsw_end_to_end_bit_exact():
+    wl = make_hsw()
+    res = build_flow(SiraModel.from_workload(wl))
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        x = rng.uniform(0.0, 1.0, size=wl.input_shape)
+        y0 = wl.graph.execute({"X": x})[wl.graph.outputs[0]]
+        y1 = res.model.graph.execute({"X": x})[res.model.graph.outputs[0]]
+        np.testing.assert_allclose(y1, y0, rtol=1e-9, atol=1e-9)
+
+
+def test_hsw_dataflow_prices_meta_kernel():
+    res = build_flow(SiraModel.from_workload(make_hsw()),
+                     steps=DATAFLOW_STEPS)
+    cmp = compare_sira_vs_baseline(res.model)
+    counts = cmp.sira.style_counts()
+    assert counts.get("meta_kernel", 0) >= 1     # uncertified fc3 chain
+    assert counts.get("thresholding", 0) >= 2    # fc1 + fc2 converted
+    meta = [n for n in cmp.sira.nodes if n.style == "meta_kernel"]
+    assert any(n.op_type == "HardSwish" for n in meta)
+    # certified-but-nonlinear thresholds keep their certificate visible
+    # to the pricing layer: the baseline re-expansion is a meta-kernel
+    assert cmp.baseline.style_counts().get("meta_kernel", 0) >= 1
+
+
+def test_existing_workloads_unaffected_by_certification():
+    """The four paper workloads are all-ReLU: every tail must still
+    convert, certified monotone, with no meta-kernel nodes."""
+    for name, mk in WORKLOADS.items():
+        res = build_flow(SiraModel.from_workload(mk()),
+                         steps=DATAFLOW_STEPS)
+        assert all(r.converted for r in res.tail_reports), name
+        assert all(r.status == "monotone" for r in res.tail_reports), name
+        cmp = compare_sira_vs_baseline(res.model)
+        assert cmp.sira.style_counts().get("meta_kernel", 0) == 0, name
