@@ -6,16 +6,31 @@ interpreter (``Graph.execute``) and through the compiled backend
 jnp reference path on CPU, Pallas on TPU), on the same batched inputs,
 and record per-sample latency + speedup.
 
+The TFC row additionally carries the **tracer-overhead guard**: the
+compiled path is re-timed with the ``repro.obs`` tracer enabled, and the
+run aborts if enabled tracing costs more than 5% vs disabled — tracing
+must never poison the dispatch-bound numbers (``trace_off_on_ratio`` is
+gated in ``scripts/check_bench.py`` with a 0.95 hard floor).
+
+Artifacts are routed through :func:`repro.obs.metrics.export_bench`, so
+alongside ``BENCH_backend.json`` (schema unchanged) a Prometheus
+text-format ``BENCH_backend.prom`` is written from the same registry.
+
     PYTHONPATH=src python benchmarks/bench_backend.py \
-        [--batch 64] [--repeat 5] [--quick] [--out BENCH_backend.json]
+        [--batch 64] [--repeat 5] [--quick] [--out BENCH_backend.json] \
+        [--trace trace_backend.json]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
+
+#: workload whose compiled path carries the tracer-overhead guard — the
+#: smallest (dispatch-bound) graph, where per-call overhead shows first
+TRACE_GUARD_WORKLOAD = "TFC-w2a2"
+TRACE_OVERHEAD_LIMIT = 1.05
 
 
 def _time(fn, repeat: int) -> float:
@@ -26,6 +41,25 @@ def _time(fn, repeat: int) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _trace_overhead(compiled, feeds, repeat: int) -> float:
+    """Best-of-N compiled-path time ratio disabled/enabled tracer.
+
+    Returns ``disabled_s / enabled_s`` (1.0 = free, < 1.0 = enabled is
+    slower).  Uses at least 20 samples per side — the compiled TFC call
+    is ~100 us, so best-of-small-N is noise."""
+    from repro.obs.trace import disable_tracing, enable_tracing
+
+    n = max(repeat, 20)
+    disabled_s = _time(lambda: compiled(feeds), n)
+    tracer = enable_tracing()
+    try:
+        enabled_s = _time(lambda: compiled(feeds), n)
+    finally:
+        disable_tracing()
+    del tracer
+    return disabled_s / enabled_s
 
 
 def bench_workload(name: str, batch: int, repeat: int) -> dict:
@@ -46,7 +80,7 @@ def bench_workload(name: str, batch: int, repeat: int) -> dict:
     compiled = model.compile()
     compiled_s = _time(lambda: compiled(feeds), repeat)
 
-    return dict(
+    row = dict(
         workload=name,
         batch=batch,
         nodes=len(model.graph.nodes),
@@ -55,6 +89,34 @@ def bench_workload(name: str, batch: int, repeat: int) -> dict:
         compiled_us_per_sample=compiled_s / batch * 1e6,
         speedup=interp_s / compiled_s,
     )
+    if name == TRACE_GUARD_WORKLOAD:
+        ratio = _trace_overhead(compiled, feeds, repeat)
+        row["trace_off_on_ratio"] = ratio
+        if ratio < 1.0 / TRACE_OVERHEAD_LIMIT:
+            raise AssertionError(
+                f"enabled-tracer overhead on the compiled {name} path is "
+                f"{(1 / ratio - 1):.1%} (> "
+                f"{TRACE_OVERHEAD_LIMIT - 1:.0%} limit) — the obs "
+                f"instrumentation leaked work into the disabled hot path")
+    return row
+
+
+def _write_trace(path: str, workload: str, batch: int) -> None:
+    """One fully traced flow+compile+call, exported as Chrome JSON."""
+    from repro.core import build_flow
+    from repro.core.workloads import WORKLOADS
+    from repro.obs.trace import disable_tracing, enable_tracing
+
+    tracer = enable_tracing()
+    try:
+        model = build_flow(WORKLOADS[workload]()).model
+        compiled = model.compile()
+        feeds = next(model.sample_inputs())
+        compiled(feeds)
+        tracer.write_chrome_trace(path)
+    finally:
+        disable_tracing()
+    print(f"wrote {path} ({len(tracer.spans)} spans)")
 
 
 def main() -> None:
@@ -67,11 +129,16 @@ def main() -> None:
                          "bound workloads (TFC) need ~20 samples for the "
                          "regression gate to be meaningful")
     ap.add_argument("--out", default="BENCH_backend.json")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="also run one fully traced TFC flow+compile+"
+                         "call and write the Chrome trace_event JSON "
+                         "(loadable in Perfetto) to this path")
     args = ap.parse_args()
     if args.quick:
         args.batch, args.repeat = 8, 20
 
     from repro.core.workloads import WORKLOADS
+    from repro.obs.metrics import export_bench
 
     results = []
     for name in WORKLOADS:
@@ -85,9 +152,10 @@ def main() -> None:
     payload = dict(backend=jax.default_backend(),
                    batch=args.batch, repeat=args.repeat,
                    results=results)
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {args.out}")
+    export_bench(payload, args.out, key=("workload",))
+    print(f"wrote {args.out} (+ Prometheus text next to it)")
+    if args.trace:
+        _write_trace(args.trace, TRACE_GUARD_WORKLOAD, args.batch)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,6 @@ claims.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 
@@ -139,9 +138,9 @@ def main() -> None:
               f"{row['acc_bits_sum_affine']}b", flush=True)
     payload = dict(device=args.device, target_fps=args.target_fps,
                    results=results)
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {args.out}")
+    from repro.obs.metrics import export_bench
+    export_bench(payload, args.out, key=("workload",))
+    print(f"wrote {args.out} (+ Prometheus text next to it)")
 
 
 if __name__ == "__main__":

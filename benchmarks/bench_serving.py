@@ -31,7 +31,6 @@ and the paged-over-static speedup.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -188,9 +187,9 @@ def main() -> None:
                    arch=cfg.name, requests=args.requests,
                    int8_layers=f"{spec8.n_int8}/{len(spec8.layers)}",
                    results=results)
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {args.out}")
+    from repro.obs.metrics import export_bench
+    export_bench(payload, args.out, key=("engine", "batch_slots"))
+    print(f"wrote {args.out} (+ Prometheus text next to it)")
 
 
 if __name__ == "__main__":

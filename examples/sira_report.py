@@ -6,6 +6,16 @@ SIRA-vs-baseline accelerator deltas and the folding search.
 
     PYTHONPATH=src python examples/sira_report.py --arch glm4-9b
     PYTHONPATH=src python examples/sira_report.py --workload TFC-w2a2
+
+Observability hooks (``repro.obs``): ``--trace out.json`` records the
+whole report run (flow steps, range analysis, compile) as a Chrome
+trace_event JSON loadable in Perfetto; ``--explain TENSOR`` prints the
+range-provenance chain for a tensor of the analyzed model — which op
+handler produced each range, under which abstract domain, and which
+input was the widening culprit.
+
+    PYTHONPATH=src python examples/sira_report.py --workload CNV-w2a2 \
+        --trace out.json --explain <acc-tensor>
 """
 import argparse
 
@@ -17,9 +27,10 @@ from repro.core.workloads import ALL_WORKLOADS
 from repro.dataflow import (compare_sira_vs_baseline, extract_dataflow,
                             search_folding, select_tail_style, tail_cost)
 from repro.models.export import export_block_graph
+from repro.obs import disable_tracing, enable_tracing
 
 
-def arch_report(args) -> None:
+def arch_report(args) -> "SiraModel":
     cfg = get_config(args.arch, reduced=True)
     print(f"=== SIRA report: {args.arch} (reduced block, "
           f"w{args.w_bits}a{args.a_bits}) ===")
@@ -45,6 +56,7 @@ def arch_report(args) -> None:
     print("TPU mapping: accumulator dtype "
           f"{'int16' if s['mean_sira'] <= 15 else 'int32'}, fused "
           f"multithreshold tail (1 HBM pass)")
+    return model
 
 
 def verification_report(model) -> None:
@@ -79,7 +91,7 @@ def verification_report(model) -> None:
         print(f"stuck output channels (provably constant): {n_stuck}")
 
 
-def workload_report(args) -> None:
+def workload_report(args) -> "SiraModel":
     print(f"=== Dataflow DSE report: {args.workload} on {args.device} "
           f"[{args.domain} domain] ===")
     model = build_flow(ALL_WORKLOADS[args.workload](),
@@ -141,14 +153,39 @@ def workload_report(args) -> None:
 
     if args.verify:
         verification_report(model)
+    return model
+
+
+def explain_report(model, tensor: str) -> None:
+    """Print the range-provenance chain for one tensor (``--explain``)."""
+    print(f"\n=== range provenance: {tensor} ===")
+    try:
+        chain = model.explain(tensor)
+    except KeyError as e:
+        raise SystemExit(f"--explain: {e.args[0]}") from None
+    print(chain.render())
+
+
+def _resolve_workload(name: str) -> str:
+    """Accept either the exact workload key or a unique prefix
+    (``CNV`` -> ``CNV-w2a2``)."""
+    if name in ALL_WORKLOADS:
+        return name
+    hits = sorted(k for k in ALL_WORKLOADS if k.startswith(name))
+    if len(hits) == 1:
+        return hits[0]
+    raise SystemExit(f"--workload: unknown workload {name!r} "
+                     f"(choices: {sorted(ALL_WORKLOADS)})")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
-    ap.add_argument("--workload", choices=sorted(ALL_WORKLOADS),
+    ap.add_argument("--workload", metavar="NAME",
                     help="print the dataflow DSE per-node report for a "
-                         "QNN workload instead of an LM-arch report")
+                         "QNN workload instead of an LM-arch report "
+                         f"(choices: {sorted(ALL_WORKLOADS)}; a unique "
+                         "prefix like 'CNV' is accepted)")
     ap.add_argument("--device", default="pynq-z1")
     ap.add_argument("--target-fps", type=float, default=1000.0)
     ap.add_argument("--w-bits", type=int, default=4)
@@ -160,12 +197,33 @@ def main() -> None:
     ap.add_argument("--verify", action="store_true",
                     help="print the verify_ranges containment/coverage "
                          "report (workload reports only)")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="record the report run (flow/analysis/compile "
+                         "spans) and write a Chrome trace_event JSON "
+                         "loadable in Perfetto")
+    ap.add_argument("--explain", default=None, metavar="TENSOR",
+                    help="print the range-provenance chain for TENSOR "
+                         "of the analyzed model")
     args = ap.parse_args()
-
     if args.workload:
-        workload_report(args)
-    else:
-        arch_report(args)
+        args.workload = _resolve_workload(args.workload)
+
+    tracer = enable_tracing() if args.trace else None
+    try:
+        model = workload_report(args) if args.workload else arch_report(args)
+        if args.trace:
+            # compile too, so the trace carries the backend-lowering
+            # spans alongside flow/analysis — the full pipeline picture
+            model.compile()
+        if args.explain:
+            explain_report(model, args.explain)
+    finally:
+        if tracer is not None:
+            disable_tracing()
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace)
+        print(f"\nwrote {args.trace} ({len(tracer.spans)} spans — open "
+              f"in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

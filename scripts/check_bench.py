@@ -54,6 +54,10 @@ RULES = {
             "interpreter_us_per_sample": ("timing", None),
             "compiled_us_per_sample": ("timing", None),
             "speedup": ("ratio", 1.0),
+            # disabled/enabled compiled-path time with the obs tracer
+            # (emitted on the TFC row only): enabled tracing may never
+            # cost more than ~5% on the dispatch-bound compiled path
+            "trace_off_on_ratio": ("ratio", 0.95),
         },
     },
     "BENCH_serving.json": {
@@ -162,12 +166,19 @@ def _fmt(v) -> str:
 def _compare_metric(where: str, metric: str, kind: str,
                     floor: Optional[float], base, fresh,
                     timing_tol: float, ratio_tol: float,
-                    estimate_tol: float) -> Row:
+                    estimate_tol: float,
+                    base_path: Optional[Path] = None) -> Row:
     if base is None and fresh is None:
         return Row(where, metric, base, fresh, "ok")
     if base is None or fresh is None:
+        # name the metric class and the file the metric was expected in,
+        # so a failure after re-baselining is self-explanatory
+        missing_in = (f"baseline {base_path}" if base is None
+                      else "fresh artifact")
         return Row(where, metric, base, fresh, "FAIL",
-                   "present on one side only")
+                   f"{kind} metric missing from {missing_in} — "
+                   f"re-baseline with --update if the metric was "
+                   f"deliberately added/removed")
     if kind == "exact":
         if base == fresh:
             return Row(where, metric, base, fresh, "ok")
@@ -255,7 +266,8 @@ def check_file(name: str, fresh_path: Path, base_path: Path,
                 continue                  # metric not produced by this row
             rows.append(_compare_metric(
                 where, metric, kind, floor, b.get(metric), f.get(metric),
-                timing_tol, ratio_tol, estimate_tol))
+                timing_tol, ratio_tol, estimate_tol,
+                base_path=base_path))
     return rows
 
 

@@ -10,7 +10,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_backend.py \
-    --quick --out BENCH_backend.json
+    --quick --out BENCH_backend.json --trace trace.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_serving.py \
     --quick --out BENCH_serving.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_dataflow.py \

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from . import propagate as _prop
+from ..obs.trace import get_tracer
 from .lower import CompileBackend
 from .model import SiraModel
 from .passes import (AggregateScalesBiases, ConvertTailsToThresholds,
@@ -223,12 +224,20 @@ def build_flow(model, cfg: Optional[BuildConfig] = None,
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     model = _as_model(model, domain=cfg.domain)
+    tr = get_tracer()
+    with tr.span("flow:build", model=model.name, domain=cfg.domain,
+                 steps=len(cfg.steps), verify=cfg.verify):
+        return _run_flow(model, cfg)
 
+
+def _run_flow(model: SiraModel, cfg: BuildConfig) -> BuildResult:
+    tr = get_tracer()
     reports: List[StepReport] = []
     if cfg.lint != "off":
         from .passes import LintGraph
         t0 = time.perf_counter()
-        model, _ = LintGraph(strict=cfg.lint == "strict").apply(model)
+        with tr.span("step:lint_graph", pre_flow=True):
+            model, _ = LintGraph(strict=cfg.lint == "strict").apply(model)
         rep = model.metadata.get("lint")
         reports.append(StepReport(
             name="lint_graph", modified=False,
@@ -263,25 +272,40 @@ def build_flow(model, cfg: Optional[BuildConfig] = None,
         tx = resolve_step(step, cfg)
         calls0 = _prop.analysis_calls()
         t0 = time.perf_counter()
-        model, modified = tx.apply(model)
-        note = ""
-        if modified and ref_feeds:
-            if want_equiv:
-                for feeds, expect in zip(ref_feeds, ref_outs):
-                    got = model.execute(feeds)
-                    for out_name, val in zip(model.graph.outputs, expect):
-                        np.testing.assert_allclose(
-                            got[out_name], val, rtol=1e-9, atol=1e-9,
-                            err_msg=f"step {tx.name} broke equivalence")
-                note = "equivalence ok"
-            if want_contain:
-                rep = _verify_ranges(model.graph, model.ranges, ref_feeds)
-                if not rep.contained:
-                    raise AssertionError(
-                        f"step {tx.name} broke containment: "
-                        f"{rep.violations[:3]}")
-                note = (note + "; " if note else "") + "containment ok"
-        seconds = time.perf_counter() - t0
+        # A raising step still closes its span (with an ``error`` attr
+        # and partial analysis-call count), so a failed flow produces a
+        # usable trace up to and including the failing step.
+        with tr.span(f"step:{tx.name}") as sp:
+            try:
+                model, modified = tx.apply(model)
+                sp.set_attr("modified", modified)
+                note = ""
+                if modified and ref_feeds:
+                    if want_equiv:
+                        for feeds, expect in zip(ref_feeds, ref_outs):
+                            got = model.execute(feeds)
+                            for out_name, val in zip(
+                                    model.graph.outputs, expect):
+                                np.testing.assert_allclose(
+                                    got[out_name], val, rtol=1e-9,
+                                    atol=1e-9,
+                                    err_msg=f"step {tx.name} broke "
+                                            f"equivalence")
+                        note = "equivalence ok"
+                    if want_contain:
+                        rep = _verify_ranges(model.graph, model.ranges,
+                                             ref_feeds)
+                        if not rep.contained:
+                            raise AssertionError(
+                                f"step {tx.name} broke containment: "
+                                f"{rep.violations[:3]}")
+                        note = (note + "; " if note else "") + \
+                            "containment ok"
+            finally:
+                sp.set_attr("analysis_calls",
+                            _prop.analysis_calls() - calls0)
+        seconds = sp.dur_s if getattr(sp, "dur_s", None) is not None \
+            else time.perf_counter() - t0
         reports.append(StepReport(
             name=tx.name, modified=modified, seconds=seconds,
             analysis_calls=_prop.analysis_calls() - calls0, note=note))

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 
+from ..obs.trace import get_tracer
 from .graph import Graph, Node, quant_bounds
 from .intervals import ScaledIntRange
 from .model import SiraModel
@@ -112,6 +113,9 @@ class _Lowerer:
         self._const_cache: Dict[Tuple[str, bool], jnp.ndarray] = {}
         self.is_int: Dict[str, bool] = {}      # dynamic tensors only
         self.steps: List[Callable[[Env], None]] = []
+        # one human-readable label per step closure (for profile() spans);
+        # NOT 1:1 with self.plan — const folds add plan entries only
+        self.step_labels: List[str] = []
         self.plan: List[LoweredOp] = []
         self._skip: set = set()                # nodes consumed by fusion
 
@@ -173,6 +177,7 @@ class _Lowerer:
         for node in self.g.nodes:
             if node.name in self._skip:
                 continue
+            n0 = len(self.steps)
             if all(t in self.consts for t in node.inputs):
                 self._fold(node)
                 continue
@@ -182,6 +187,9 @@ class _Lowerer:
                     f"no lowering for op {node.op_type!r} "
                     f"(node {node.name})")
             fn(node)
+            self.step_labels.extend(
+                f"{node.op_type}:{node.name}"
+                for _ in range(len(self.steps) - n0))
         for out in self.g.outputs:
             if out not in self.consts and out not in self.is_int:
                 raise LoweringError(f"graph output {out} was never lowered")
@@ -711,7 +719,7 @@ class CompiledSiraModel:
     """
 
     def __init__(self, name: str, steps, plan, outputs, int_tensors,
-                 dtype):
+                 dtype, step_labels: Optional[Sequence[str]] = None):
         # only the name — holding the SiraModel would pin its graph and
         # cached range arrays (and create a cycle via metadata['compiled'])
         self.name = name
@@ -720,6 +728,9 @@ class CompiledSiraModel:
         self.int_tensors: List[str] = list(int_tensors)
         self.dtype = dtype
         self._steps = steps
+        self.step_labels: List[str] = list(
+            step_labels if step_labels is not None
+            else (f"step{i}" for i in range(len(steps))))
         self._jfn = jax.jit(self._forward)
 
     def _forward(self, feeds: Dict[str, jnp.ndarray]
@@ -735,8 +746,30 @@ class CompiledSiraModel:
         return {t: env[t] for t in self.outputs}
 
     def __call__(self, feeds: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        tr = get_tracer()
+        if tr.enabled:
+            with tr.span("compiled:call", model=self.name):
+                out = self._jfn({k: np.asarray(v)
+                                 for k, v in feeds.items()})
+                return {k: np.asarray(v) for k, v in out.items()}
         out = self._jfn({k: np.asarray(v) for k, v in feeds.items()})
         return {k: np.asarray(v) for k, v in out.items()}
+
+    def profile(self, feeds: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Per-kernel dispatch timing: execute the step closures eagerly
+        (no jit) with one span per lowered kernel, blocking on each so
+        span durations reflect device time.  Slower than ``__call__`` by
+        construction — a diagnostics path, never the serving path."""
+        tr = get_tracer()
+        env: Env = {k: jnp.asarray(np.asarray(v)).astype(self.dtype)
+                    for k, v in feeds.items()}
+        with tr.span("compiled:profile", model=self.name,
+                     kernels=len(self._steps)):
+            for label, run in zip(self.step_labels, self._steps):
+                with tr.span(f"kernel:{label}"):
+                    run(env)
+                    env = jax.block_until_ready(env)
+        return {t: np.asarray(env[t]) for t in self.outputs}
 
     @property
     def kernel_calls(self) -> Dict[str, int]:
@@ -771,33 +804,40 @@ def lower(model: SiraModel, *, use_pallas: Optional[bool] = None,
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     if fuse_epilogue is None:
         fuse_epilogue = jnp.dtype(dtype) == jnp.dtype(jnp.float32)
-    lw = _Lowerer(model, use_pallas=use_pallas, interpret=interpret,
-                  dtype=dtype, fuse_epilogue=fuse_epilogue)
-    lw.build()
-    outputs = list(model.graph.outputs)
-    for t in extra_outputs:
-        if t not in lw.consts and t not in lw.is_int:
-            raise LoweringError(
-                f"extra output {t!r} is not materialized by the lowered "
-                f"program (unknown tensor, or eliminated by epilogue "
-                f"fusion — retry with fuse_epilogue=False)")
-        if t not in outputs:
-            outputs.append(t)
-    # constant outputs (fully folded graphs) are materialized up front
-    const_outs = {t for t in outputs if t in lw.consts}
-    if const_outs:
-        consts = {t: np.asarray(lw.consts[t]) for t in const_outs}
-        inner_steps = list(lw.steps)
+    with get_tracer().span("compile:lower", model=model.name,
+                           nodes=len(model.graph.nodes),
+                           dtype=str(jnp.dtype(dtype))) as sp:
+        lw = _Lowerer(model, use_pallas=use_pallas, interpret=interpret,
+                      dtype=dtype, fuse_epilogue=fuse_epilogue)
+        with get_tracer().span("compile:build_plan"):
+            lw.build()
+        sp.set_attr("plan_ops", len(lw.plan))
+        outputs = list(model.graph.outputs)
+        for t in extra_outputs:
+            if t not in lw.consts and t not in lw.is_int:
+                raise LoweringError(
+                    f"extra output {t!r} is not materialized by the "
+                    f"lowered program (unknown tensor, or eliminated by "
+                    f"epilogue fusion — retry with fuse_epilogue=False)")
+            if t not in outputs:
+                outputs.append(t)
+        # constant outputs (fully folded graphs) are materialized up front
+        const_outs = {t for t in outputs if t in lw.consts}
+        labels = list(lw.step_labels)
+        if const_outs:
+            consts = {t: np.asarray(lw.consts[t]) for t in const_outs}
+            inner_steps = list(lw.steps)
 
-        def emit_consts(env: Env) -> None:
-            for t, v in consts.items():
-                env[t] = jnp.asarray(v)
-        steps = [emit_consts] + inner_steps
-    else:
-        steps = lw.steps
-    int_tensors = [t for t, flag in lw.is_int.items() if flag]
-    return CompiledSiraModel(model.name, steps, lw.plan, outputs,
-                             int_tensors, dtype)
+            def emit_consts(env: Env) -> None:
+                for t, v in consts.items():
+                    env[t] = jnp.asarray(v)
+            steps = [emit_consts] + inner_steps
+            labels = ["consts"] + labels
+        else:
+            steps = lw.steps
+        int_tensors = [t for t, flag in lw.is_int.items() if flag]
+        return CompiledSiraModel(model.name, steps, lw.plan, outputs,
+                                 int_tensors, dtype, step_labels=labels)
 
 
 class CompileBackend(Transformation):

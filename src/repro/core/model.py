@@ -27,6 +27,8 @@ import numpy as np
 from .graph import Graph
 from .intervals import ScaledIntRange
 from .propagate import analyze
+from ..obs.explain import ProvenanceChain, RangeProvenance, build_chain
+from ..obs.trace import get_tracer
 
 
 class SiraModel:
@@ -48,6 +50,7 @@ class SiraModel:
         self.metadata: Dict[str, Any] = dict(metadata or {})
         self._ranges: Optional[Dict[str, ScaledIntRange]] = None
         self._cache_version: Optional[Tuple[int, int]] = None
+        self._provenance: Optional[Dict[str, RangeProvenance]] = None
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -68,6 +71,7 @@ class SiraModel:
             # graph.copy() is semantics-preserving → the analysis carries over
             m._ranges = self._ranges
             m._cache_version = m.graph.cache_key
+            m._provenance = self._provenance
         return m
 
     # -------------------------------------------------------------- analysis
@@ -77,10 +81,19 @@ class SiraModel:
         graph has been mutated since the last analysis."""
         if self._ranges is None or \
                 self._cache_version != self.graph.cache_key:
+            get_tracer().count("range_cache.miss",
+                               graph_version=self.graph.version,
+                               model=self.name)
+            record: Dict[str, RangeProvenance] = {}
             self._ranges = analyze(self.graph, self.input_ranges,
-                                   domain=self.domain)
+                                   domain=self.domain, record=record)
+            self._provenance = record
             # analyze() toposorts, which may bump the version once
             self._cache_version = self.graph.cache_key
+        else:
+            get_tracer().count("range_cache.hit",
+                               graph_version=self.graph.version,
+                               model=self.name)
         return self._ranges
 
     def range_of(self, tensor: str) -> Optional[ScaledIntRange]:
@@ -93,8 +106,28 @@ class SiraModel:
 
     def invalidate(self) -> None:
         """Drop the cached analysis (automatic for API-mediated edits)."""
+        get_tracer().count("range_cache.invalidate",
+                           graph_version=self.graph.version,
+                           model=self.name)
         self._ranges = None
         self._cache_version = None
+        self._provenance = None
+
+    def explain(self, tensor: str) -> ProvenanceChain:
+        """Why does ``tensor`` have the bounds it has?  Returns the
+        culprit-linked :class:`~repro.obs.explain.ProvenanceChain` from
+        the tensor back to a graph input — which op handler and abstract
+        domain produced each range, and which input widened it."""
+        self.ranges  # ensure analysis (and its provenance) is current
+        assert self._provenance is not None
+        return build_chain(tensor, self._provenance)
+
+    @property
+    def provenance(self) -> Dict[str, RangeProvenance]:
+        """Per-tensor :class:`RangeProvenance` for the cached analysis."""
+        self.ranges
+        assert self._provenance is not None
+        return self._provenance
 
     # ------------------------------------------------------------- execution
     def execute(self, feeds: Dict[str, np.ndarray],

@@ -28,6 +28,8 @@ from .graph import Graph, Node, quant_bounds, round_half_to_even
 from .intervals import (Array, ScaledIntRange, add_intervals, dot_interval,
                         monotonic_fn_interval, mul_intervals)
 from .ops import PROP_REGISTRY, register_op  # noqa: F401  (re-exported)
+from ..obs.explain import RangeProvenance
+from ..obs.trace import get_tracer
 
 POISON = "!unerasable"
 
@@ -69,10 +71,19 @@ class SIRA:
         self.graph = graph
         self.domain = domain
 
-    def run(self, input_ranges: Dict[str, ScaledIntRange]
+    def run(self, input_ranges: Dict[str, ScaledIntRange],
+            record: Optional[Dict[str, RangeProvenance]] = None
             ) -> Dict[str, ScaledIntRange]:
         global ANALYSIS_CALLS
         ANALYSIS_CALLS += 1
+        with get_tracer().span("analysis:propagate", domain=self.domain,
+                               nodes=len(self.graph.nodes),
+                               provenance=record is not None):
+            return self._run(input_ranges, record)
+
+    def _run(self, input_ranges: Dict[str, ScaledIntRange],
+             record: Optional[Dict[str, RangeProvenance]]
+             ) -> Dict[str, ScaledIntRange]:
         affine = self.domain == "affine"
         if affine:
             from .affine import affine_step, seed_forms
@@ -80,8 +91,13 @@ class SIRA:
         ranges: Dict[str, ScaledIntRange] = {}
         for name, val in self.graph.initializers.items():
             ranges[name] = ScaledIntRange.point(val)
+            if record is not None:
+                record[name] = _seed_record(name, "const", ranges[name],
+                                            self.domain)
         for name, r in input_ranges.items():
             ranges[name] = r
+            if record is not None:
+                record[name] = _seed_record(name, "input", r, self.domain)
         missing = [i for i in self.graph.inputs if i not in ranges]
         if missing:
             raise ValueError(f"missing input ranges for {missing}")
@@ -95,17 +111,73 @@ class SIRA:
             outs = fn(node, self.graph, in_ranges)
             if not isinstance(outs, tuple):
                 outs = (outs,)
+            tightened = [False] * len(outs)
             if affine:
+                pre = outs
                 outs = tuple(affine_step(node, self.graph, forms,
                                          in_ranges, outs))
-            for name, r in zip(node.outputs, outs):
+                if record is not None:
+                    tightened = [_width(a) < _width(b)
+                                 for a, b in zip(outs, pre)]
+            for i, (name, r) in enumerate(zip(node.outputs, outs)):
                 ranges[name] = r
+                if record is not None:
+                    record[name] = _node_record(
+                        name, node, self.graph, fn, in_ranges, r,
+                        self.domain, tightened[i])
         return ranges
 
 
 def analyze(graph: Graph, input_ranges: Dict[str, ScaledIntRange],
-            domain: str = "interval") -> Dict[str, ScaledIntRange]:
-    return SIRA(graph, domain=domain).run(input_ranges)
+            domain: str = "interval",
+            record: Optional[Dict[str, RangeProvenance]] = None
+            ) -> Dict[str, ScaledIntRange]:
+    return SIRA(graph, domain=domain).run(input_ranges, record=record)
+
+
+# --------------------------------------------------------------------------
+# provenance recording (repro.obs.explain)
+# --------------------------------------------------------------------------
+
+def _width(r: ScaledIntRange) -> float:
+    if r.is_point:
+        return 0.0
+    return float(np.max(np.asarray(r.hi) - np.asarray(r.lo)))
+
+
+def _range_str(r: ScaledIntRange) -> str:
+    lo, hi = float(np.min(r.lo)), float(np.max(r.hi))
+    return f"[{lo:g}, {hi:g}]"
+
+
+def _bits(r: ScaledIntRange) -> Optional[int]:
+    return int(r.required_signed_bits()) if r.is_scaled_int else None
+
+
+def _seed_record(name: str, kind: str, r: ScaledIntRange,
+                 domain: str) -> RangeProvenance:
+    return RangeProvenance(
+        tensor=name, node_name="", op_type=kind, handler=kind,
+        domain=domain, affine_tightened=False, inputs=(), culprit=None,
+        width=_width(r), in_widths={}, bits=_bits(r),
+        range_str=_range_str(r))
+
+
+def _node_record(name: str, node: Node, graph: Graph, fn,
+                 in_ranges: List[ScaledIntRange], r: ScaledIntRange,
+                 domain: str, tightened: bool) -> RangeProvenance:
+    in_widths: Dict[str, float] = {}
+    for t, ir in zip(node.inputs, in_ranges):
+        if not graph.is_constant(t):
+            in_widths[t] = _width(ir)
+    culprit = max(in_widths, key=in_widths.__getitem__, default=None) \
+        if in_widths else None
+    return RangeProvenance(
+        tensor=name, node_name=node.name, op_type=node.op_type,
+        handler=getattr(fn, "__name__", str(fn)), domain=domain,
+        affine_tightened=tightened, inputs=tuple(in_widths),
+        culprit=culprit, width=_width(r), in_widths=in_widths,
+        bits=_bits(r), range_str=_range_str(r))
 
 
 # --------------------------------------------------------------------------

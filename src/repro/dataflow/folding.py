@@ -23,6 +23,7 @@ import math
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 from ..core.model import SiraModel
+from ..obs.trace import get_tracer
 from .estimate import (DataflowGraph, GraphEstimate, extract_dataflow,
                        estimate, widen_dataflow)
 from .resources import (DeviceBudget, DSP_LUT_EQUIV, NodeModel,
@@ -54,7 +55,9 @@ def _cheapest_folding_for(node: NodeModel, target_cycles: int,
     """Least-resource (pe, simd) meeting the cycle budget, or None."""
     best: Optional[Tuple[int, int]] = None
     best_score = math.inf
+    n_cand = 0
     for pe, simd in fold_options(node):
+        n_cand += 1
         if cycles_per_frame(node, pe, simd) > target_cycles:
             continue
         style = (baseline_style(node) if styles == "baseline"
@@ -63,6 +66,7 @@ def _cheapest_folding_for(node: NodeModel, target_cycles: int,
                                dsp_lut_equiv)
         if score < best_score:
             best, best_score = (pe, simd), score
+    get_tracer().count("folding.candidates", n_cand, node=node.name)
     return best
 
 
@@ -76,6 +80,28 @@ def search_folding(model: SiraModel, *,
                    ) -> FoldingResult:
     """Find a folding that hits ``target_fps`` within the device budget,
     or report the binding constraint that prevents it."""
+    tr = get_tracer()
+    with tr.span("dse:search_folding", target_fps=target_fps) as sp:
+        result = _search_folding(model, target_fps=target_fps,
+                                 device=device, widths=widths,
+                                 styles=styles,
+                                 input_shapes=input_shapes,
+                                 dataflow_graph=dataflow_graph)
+        sp.set_attr("device", result.device)
+        sp.set_attr("feasible", result.feasible)
+        if result.binding is not None:
+            sp.set_attr("binding", result.binding)
+        return result
+
+
+def _search_folding(model: SiraModel, *,
+                    target_fps: float,
+                    device: Union[str, DeviceBudget],
+                    widths: str, styles: str,
+                    input_shapes: Optional[Dict[str, Sequence[int]]],
+                    dataflow_graph: Optional[DataflowGraph]
+                    ) -> FoldingResult:
+    tr = get_tracer()
     d = get_device(device)
     dfg = dataflow_graph or extract_dataflow(model, input_shapes)
     target_cycles = max(1, int(d.fclk_mhz * 1e6 / target_fps))
@@ -95,6 +121,7 @@ def search_folding(model: SiraModel, *,
                                folding=folding, device=d,
                                dataflow_graph=dfg,
                                dsp_lut_equiv=dsp_lut_equiv)
+                tr.count("folding.reject.ii", node=nm.name)
                 return FoldingResult(
                     feasible=False, folding=folding,
                     target_fps=target_fps, achieved_fps=est.fps,
@@ -109,6 +136,8 @@ def search_folding(model: SiraModel, *,
         over = {k: v for k, v in util.items() if v > 1.0}
         if over:
             binding = max(over, key=over.get)
+            tr.count(f"folding.reject.{binding}",
+                     utilization=round(over[binding], 3))
             return FoldingResult(feasible=False, folding=folding,
                                  target_fps=target_fps,
                                  achieved_fps=est.fps, utilization=util,
@@ -143,6 +172,23 @@ def max_throughput(model: SiraModel, *,
                    ) -> FoldingResult:
     """Fastest feasible design point: binary search over the cycle budget
     between the fully-parallel II and the fully-folded II."""
+    with get_tracer().span("dse:max_throughput",
+                           device=get_device(device).name) as sp:
+        result = _max_throughput(model, device=device, widths=widths,
+                                 styles=styles,
+                                 input_shapes=input_shapes,
+                                 dataflow_graph=dataflow_graph)
+        sp.set_attr("feasible", result.feasible)
+        sp.set_attr("achieved_fps", result.achieved_fps)
+        return result
+
+
+def _max_throughput(model: SiraModel, *,
+                    device: Union[str, DeviceBudget],
+                    widths: str, styles: str,
+                    input_shapes: Optional[Dict[str, Sequence[int]]],
+                    dataflow_graph: Optional[DataflowGraph]
+                    ) -> FoldingResult:
     d = get_device(device)
     dfg = dataflow_graph or extract_dataflow(model, input_shapes)
     # the graph II can never beat the slowest node's fully-parallel II

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.obs.trace import get_tracer
 from repro.quant.quantizer import QuantSpec
 
 from .draft import DraftProposer, get_drafter
@@ -181,15 +182,20 @@ class ServingEngine:
         C = self.prefill_chunk
         table = self.cache.slot_table(slot)
         logits = None
-        for start in range(0, L, C):
-            chunk = seq[start:start + C]
-            toks = np.zeros((1, C), np.int32)
-            toks[0, :len(chunk)] = chunk
-            logits, pages = self._step_fn(
-                self.params, jnp.asarray(toks), self.cache.pages, table,
-                jnp.full((1,), start, jnp.int32))
-            self.cache.pages = pages
-            self.metrics.on_prefill_chunk()
+        tr = get_tracer()
+        with tr.span("serve:prefill", slot=slot, prompt_tokens=L,
+                     chunk=C):
+            for start in range(0, L, C):
+                chunk = seq[start:start + C]
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :len(chunk)] = chunk
+                with tr.span("serve:prefill_chunk", start=start):
+                    logits, pages = self._step_fn(
+                        self.params, jnp.asarray(toks),
+                        self.cache.pages, table,
+                        jnp.full((1,), start, jnp.int32))
+                self.cache.pages = pages
+                self.metrics.on_prefill_chunk()
         self.scheduler.set_prefilled(slot, L)
 
         req = entry.request
@@ -238,6 +244,11 @@ class ServingEngine:
         active = sched.active_slots()
         if not active:
             return
+        with get_tracer().span("serve:decode_step", active=len(active),
+                               batch_slots=self.B):
+            self._decode_once_inner(sched, active)
+
+    def _decode_once_inner(self, sched, active) -> None:
         B = self.B
         toks = np.zeros((B,), np.int32)
         lens = np.zeros((B,), np.int32)
@@ -307,7 +318,11 @@ class ServingEngine:
         active = sched.active_slots()
         if not active:
             return
+        with get_tracer().span("serve:spec_verify", active=len(active),
+                               spec_k=k) as sp:
+            self._verify_window(sched, proposals, active, T, sp)
 
+    def _verify_window(self, sched, proposals, active, T, sp) -> None:
         B = self.B
         toks = np.zeros((B, T), np.int32)
         lens = np.zeros((B,), np.int32)
@@ -369,6 +384,9 @@ class ServingEngine:
                                      sched.slots[i].entry.prng_id)
         self.metrics.on_decode_step(len(active), B, tokens=emitted_total)
         self.metrics.on_spec_step(proposed, accepted_total)
+        sp.set_attr("proposed", proposed)
+        sp.set_attr("accepted", accepted_total)
+        sp.set_attr("emitted", emitted_total)
 
     # ---------------------------------------------------------- generate
     def generate(self, requests: List[Request]) -> List[List[int]]:

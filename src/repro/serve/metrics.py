@@ -2,12 +2,21 @@
 
 Pure host-side bookkeeping updated by the scheduler/engine between jitted
 steps; ``clock`` is injectable so tests can drive deterministic time.
+
+``ServingMetrics`` is a compatibility facade over a
+:class:`repro.obs.metrics.MetricsRegistry`: the public API (event
+methods, count fields, aggregate properties, ``summary()``) is unchanged
+from the pre-obs implementation, but every count lives in a typed
+registry metric and every latency lands in a histogram, so the same
+numbers the tests assert on are scrapeable via :meth:`to_prometheus`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
+
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -45,35 +54,109 @@ class ServingMetrics:
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
         self.requests: Dict[int, RequestRecord] = {}
-        self.decode_steps = 0
-        self.decode_tokens = 0
-        self.active_slot_steps = 0
-        self.slot_capacity = 0
-        self.prefill_chunks = 0
-        self.preemptions = 0
-        self.spec_steps = 0
-        self.spec_proposed = 0
-        self.spec_accepted = 0
+        # every ServingMetrics owns a fresh registry — engines call
+        # reset_metrics() by constructing a new instance, which must not
+        # carry counts over
+        self.registry = MetricsRegistry()
+        r = self.registry
+        self._decode_steps = r.counter(
+            "serving_decode_steps_total", "jitted decode calls")
+        self._decode_tokens = r.counter(
+            "serving_decode_tokens_total",
+            "tokens emitted by decode steps")
+        self._active_slot_steps = r.counter(
+            "serving_active_slot_steps_total",
+            "sum of active slots over decode steps")
+        self._slot_capacity = r.counter(
+            "serving_slot_capacity_total",
+            "sum of total slots over decode steps")
+        self._prefill_chunks = r.counter(
+            "serving_prefill_chunks_total", "jitted prefill chunk calls")
+        self._preemptions = r.counter(
+            "serving_preemptions_total", "requests preempted")
+        self._spec_steps = r.counter(
+            "serving_spec_steps_total", "speculative verify steps")
+        self._spec_proposed = r.counter(
+            "serving_spec_proposed_total", "draft tokens proposed")
+        self._spec_accepted = r.counter(
+            "serving_spec_accepted_total", "draft tokens accepted")
+        self._submitted = r.counter(
+            "serving_requests_total", "requests submitted")
+        self._tokens = r.counter(
+            "serving_tokens_total", "tokens generated")
+        self._ttft_hist = r.histogram(
+            "serving_ttft_seconds", "submit to first token")
+        self._latency_hist = r.histogram(
+            "serving_token_latency_seconds",
+            "gap between consecutive tokens of one request")
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
+
+    # ------------------------------------------------- registry-backed
+    # count fields keep their historical names/types (plain ints) while
+    # the registry holds the authoritative value
+    @property
+    def decode_steps(self) -> int:
+        return int(self._decode_steps.value)
+
+    @property
+    def decode_tokens(self) -> int:
+        return int(self._decode_tokens.value)
+
+    @property
+    def active_slot_steps(self) -> int:
+        return int(self._active_slot_steps.value)
+
+    @property
+    def slot_capacity(self) -> int:
+        return int(self._slot_capacity.value)
+
+    @property
+    def prefill_chunks(self) -> int:
+        return int(self._prefill_chunks.value)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self._preemptions.value)
+
+    @property
+    def spec_steps(self) -> int:
+        return int(self._spec_steps.value)
+
+    @property
+    def spec_proposed(self) -> int:
+        return int(self._spec_proposed.value)
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._spec_accepted.value)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text-format export of every serving metric."""
+        return self.registry.to_prometheus()
 
     # ----------------------------------------------------------- events
     def on_submit(self, request_id: int, prompt_tokens: int) -> None:
         t = self.clock()
         self.requests[request_id] = RequestRecord(request_id, t,
                                                   prompt_tokens)
+        self._submitted.inc()
         if self._t0 is None:
             self._t0 = t
 
     def on_prefill_chunk(self) -> None:
-        self.prefill_chunks += 1
+        self._prefill_chunks.inc()
 
     def on_token(self, request_id: int) -> None:
         r = self.requests[request_id]
         t = self.clock()
         if r.first_token_t is None:
             r.first_token_t = t
+            self._ttft_hist.observe(t - r.submit_t)
+        else:
+            self._latency_hist.observe(t - r.token_times[-1])
         r.token_times.append(t)
+        self._tokens.inc()
         self._t_last = t
 
     def on_finish(self, request_id: int) -> None:
@@ -81,20 +164,20 @@ class ServingMetrics:
 
     def on_decode_step(self, active_slots: int, total_slots: int,
                        tokens: int = 0) -> None:
-        self.decode_steps += 1
-        self.decode_tokens += tokens
-        self.active_slot_steps += active_slots
-        self.slot_capacity += total_slots
+        self._decode_steps.inc()
+        self._decode_tokens.inc(tokens)
+        self._active_slot_steps.inc(active_slots)
+        self._slot_capacity.inc(total_slots)
 
     def on_spec_step(self, proposed: int, accepted: int) -> None:
         """One speculative decode step verified ``proposed`` draft tokens
         across the batch and accepted ``accepted`` of them."""
-        self.spec_steps += 1
-        self.spec_proposed += proposed
-        self.spec_accepted += accepted
+        self._spec_steps.inc()
+        self._spec_proposed.inc(proposed)
+        self._spec_accepted.inc(accepted)
 
     def on_preemption(self, request_id: int) -> None:
-        self.preemptions += 1
+        self._preemptions.inc()
         self.requests[request_id].preemptions += 1
 
     # ------------------------------------------------------- aggregates
