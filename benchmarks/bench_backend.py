@@ -31,6 +31,11 @@ import numpy as np
 #: smallest (dispatch-bound) graph, where per-call overhead shows first
 TRACE_GUARD_WORKLOAD = "TFC-w2a2"
 TRACE_OVERHEAD_LIMIT = 1.05
+#: the guard always measures at this batch regardless of --quick: the
+#: 5% limit is calibrated against a ~100 us call — at tiny batches the
+#: call shrinks toward pure dispatch and the same fixed tracer cost
+#: would read as a limit-breaking percentage on every machine
+TRACE_GUARD_BATCH = 64
 
 
 def _time(fn, repeat: int) -> float:
@@ -47,18 +52,22 @@ def _trace_overhead(compiled, feeds, repeat: int) -> float:
     """Best-of-N compiled-path time ratio disabled/enabled tracer.
 
     Returns ``disabled_s / enabled_s`` (1.0 = free, < 1.0 = enabled is
-    slower).  Uses at least 20 samples per side — the compiled TFC call
-    is ~100 us, so best-of-small-N is noise."""
+    slower).  The compiled TFC call is ~100 us, so best-of-small-N is
+    noise; worse, a single disabled-then-enabled pass is one-sided — a
+    scheduler blip during the enabled half reads as tracer overhead.
+    Interleave several rounds and keep each side's global best."""
     from repro.obs.trace import disable_tracing, enable_tracing
 
     n = max(repeat, 20)
-    disabled_s = _time(lambda: compiled(feeds), n)
-    tracer = enable_tracing()
-    try:
-        enabled_s = _time(lambda: compiled(feeds), n)
-    finally:
-        disable_tracing()
-    del tracer
+    disabled_s = enabled_s = float("inf")
+    for _ in range(3):
+        disabled_s = min(disabled_s, _time(lambda: compiled(feeds), n))
+        tracer = enable_tracing()
+        try:
+            enabled_s = min(enabled_s, _time(lambda: compiled(feeds), n))
+        finally:
+            disable_tracing()
+        del tracer
     return disabled_s / enabled_s
 
 
@@ -90,7 +99,11 @@ def bench_workload(name: str, batch: int, repeat: int) -> dict:
         speedup=interp_s / compiled_s,
     )
     if name == TRACE_GUARD_WORKLOAD:
-        ratio = _trace_overhead(compiled, feeds, repeat)
+        gshape = (TRACE_GUARD_BATCH,) + shape[1:]
+        gfeeds = {inp: rng.uniform(np.broadcast_to(lo[:1], gshape),
+                                   np.broadcast_to(hi[:1], gshape),
+                                   size=gshape)}
+        ratio = _trace_overhead(compiled, gfeeds, repeat)
         row["trace_off_on_ratio"] = ratio
         if ratio < 1.0 / TRACE_OVERHEAD_LIMIT:
             raise AssertionError(

@@ -12,7 +12,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import get_model
 from repro.quant.quantizer import pack_weights_int8
-from repro.serve import Request, ServingEngine, derive_kv_spec
+from repro.serve import (Request, ServingConfig, ServingEngine,
+                         derive_kv_spec)
 
 
 def main() -> None:
@@ -27,7 +28,8 @@ def main() -> None:
                     max_new_tokens=int(rng.integers(8, 24)))
             for _ in range(8)]
 
-    eng_fp = ServingEngine(model, params, batch_slots=4, max_seq=64)
+    eng_fp = ServingEngine(model, params,
+                           ServingConfig(batch_slots=4, max_seq=64))
     t0 = time.time()
     out_fp = eng_fp.generate(reqs)
     t_fp = time.time() - t0
@@ -39,8 +41,9 @@ def main() -> None:
     # to half a quant step, so fp-derived ranges would not cover it.
     params_q = pack_weights_int8(params, min_size=64)
     spec = derive_kv_spec(model, params_q)
-    eng_q = ServingEngine(model, params_q, batch_slots=4, max_seq=64,
-                          kv_cache=spec)
+    eng_q = ServingEngine(model, params_q,
+                          ServingConfig(batch_slots=4, max_seq=64,
+                                        kv_cache=spec))
     t0 = time.time()
     out_q = eng_q.generate(reqs)
     t_q = time.time() - t0

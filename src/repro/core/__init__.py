@@ -5,9 +5,13 @@ New (preferred) API — ``SiraModel`` + transformation passes + build flow:
     from repro.core import SiraModel, build_flow
     result = build_flow(SiraModel.from_workload(make_tfc()))
 
-The loose functions (``analyze``, ``streamline``,
-``convert_tails_to_thresholds``, ``minimize_accumulators``,
-``verify_ranges``) remain as deprecated shims over the pass pipeline.
+The loose functions (``analyze``, ``convert_tails_to_thresholds``,
+``minimize_accumulators``, ``verify_ranges``) remain as deprecated shims
+over the pass pipeline.  The ``streamline`` function family
+(``streamline``, ``aggregate_scales_biases``, ``explicitize_quantizers``,
+``duplicate_shared_constants``) has been removed — use
+``passes.Streamline`` / ``flow.build_flow`` or the ``*_inplace`` cores in
+``streamline.py``.
 """
 from .intervals import ScaledIntRange, InvalidRangeError   # noqa: F401
 from .ops import (OpDef, OP_REGISTRY, register_op, get_op,  # noqa: F401
@@ -19,8 +23,7 @@ from .propagate import (SIRA, analyze, analysis_calls,     # noqa: F401
 from .affine import (AffineForm, tighten_range,            # noqa: F401
                      fresh_symbol)
 from .model import SiraModel                               # noqa: F401
-from .streamline import (streamline, aggregate_scales_biases,   # noqa: F401
-                         explicitize_quantizers, remove_identity_ops,
+from .streamline import (remove_identity_ops,              # noqa: F401
                          AggregationResult)
 from .monotone import (MonotoneCertificate, MonotoneStep,  # noqa: F401
                        certify_tail, compose_direction)

@@ -21,20 +21,20 @@ dropped); targets containing unsafe contributors are skipped, to fixpoint.
 
 This module holds the *graph-rewrite cores* (in-place, change-reporting);
 the pipeline entry points are the :class:`~repro.core.passes.Transformation`
-classes in ``passes.py``.  The loose functions at the bottom are deprecated
-shims kept for the pre-``SiraModel`` API.
+classes in ``passes.py`` (the pre-``SiraModel`` function-style shims that
+used to live at the bottom of this file are gone — drive the cores through
+``passes.Streamline`` / ``flow.build_flow``).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from .graph import Graph, Node, fresh_name, quant_bounds, round_half_to_even
 from .intervals import ScaledIntRange
-from .propagate import POISON, analyze
+from .propagate import POISON
 
 # ops that end an affine region (paper: activations form the boundary).
 # MaxPool is *not* a boundary: max(s*q+b) = s*max(q)+b for s>0, so scales
@@ -325,66 +325,3 @@ def remove_identity_ops(g: Graph) -> bool:
             g.replace_input(dst, src)
             changed = any_changed = True
     return any_changed
-
-
-# --------------------------------------------------------------------------
-# deprecated function-style entry points (pre-SiraModel API)
-# --------------------------------------------------------------------------
-
-def _warn_deprecated(name: str, replacement: str) -> None:
-    warnings.warn(
-        f"repro.core.streamline.{name}() is a deprecated pre-SiraModel "
-        f"entry point; use {replacement}",
-        DeprecationWarning, stacklevel=3)
-
-
-def explicitize_quantizers(graph: Graph) -> Graph:
-    """Deprecated shim — prefer ``passes.ExplicitizeQuantizers``."""
-    _warn_deprecated("explicitize_quantizers",
-                     "passes.ExplicitizeQuantizers on a SiraModel")
-    g = graph.copy()
-    explicitize_quantizers_inplace(g)
-    return g
-
-
-def duplicate_shared_constants(graph: Graph) -> Graph:
-    """Deprecated shim — constant duplication happens inside the
-    ``passes.AggregateScalesBiases`` pass."""
-    _warn_deprecated("duplicate_shared_constants",
-                     "passes.AggregateScalesBiases on a SiraModel")
-    g = graph.copy()
-    duplicate_shared_constants_inplace(g)
-    return g
-
-
-def _aggregate_scales_biases(
-        graph: Graph,
-        input_ranges: Dict[str, ScaledIntRange],
-        explicitize: bool = True) -> AggregationResult:
-    g = graph.copy()
-    if explicitize:
-        explicitize_quantizers_inplace(g)
-    duplicate_shared_constants_inplace(g)
-    ranges = analyze(g, input_ranges)
-    result, _ = aggregate_with_ranges(g, ranges)
-    return result
-
-
-def aggregate_scales_biases(
-        graph: Graph,
-        input_ranges: Dict[str, ScaledIntRange],
-        explicitize: bool = True) -> AggregationResult:
-    """Deprecated shim — prefer ``passes.AggregateScalesBiases`` on a
-    ``SiraModel`` (which reuses the model's cached analysis)."""
-    _warn_deprecated("aggregate_scales_biases",
-                     "passes.AggregateScalesBiases on a SiraModel")
-    return _aggregate_scales_biases(graph, input_ranges, explicitize)
-
-
-def streamline(graph: Graph, input_ranges: Dict[str, ScaledIntRange]
-               ) -> AggregationResult:
-    """Full SIRA streamlining: explicitize + aggregate (threshold conversion
-    is a separate, optional pass — see thresholds.py).  Deprecated shim —
-    prefer ``passes.Streamline`` / ``flow.build_flow``."""
-    _warn_deprecated("streamline", "passes.Streamline / flow.build_flow")
-    return _aggregate_scales_biases(graph, input_ranges)

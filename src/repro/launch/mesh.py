@@ -23,3 +23,11 @@ def make_debug_mesh(n_devices: int = 1):
     n = min(n_devices, len(jax.devices()))
     model = 2 if n % 2 == 0 else 1
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for in-jit ``shard()``
+    constraints — ``jax.set_mesh`` on jax >= 0.5, the ``Mesh`` object
+    itself (it is a context manager) on the pinned 0.4.x."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh

@@ -139,3 +139,21 @@ def named(mesh, spec_tree: Any, shape_tree: Any = None) -> Any:
 
 def batch_pspec(ndim: int) -> P:
     return P(("pod", "data"), *((None,) * (ndim - 1)))
+
+
+def kv_page_pspec() -> P:
+    """PartitionSpec for a serving KV page pool of shape
+    (num_pages, page_size, n_kv_heads, head_dim): the KV-head dim over
+    "model" — tensor-parallel decode with a per-device shard of every
+    physical page, so the host-side page table / free list stay global
+    while the KV bytes split across the mesh."""
+    return P(None, None, "model", None)
+
+
+def kv_pool_sharding(mesh, n_kv_heads: int) -> NamedSharding:
+    """Divisibility-guarded NamedSharding for the page pools: the head
+    dim degrades to replication when the mesh's "model" axis does not
+    divide ``n_kv_heads`` (2 KV heads on a 16-way axis would pad 8x)."""
+    return NamedSharding(
+        mesh, filter_pspec_for_mesh(kv_page_pspec(), mesh,
+                                    (1, 1, n_kv_heads, 1)))

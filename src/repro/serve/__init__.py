@@ -1,22 +1,28 @@
 """Serving subsystem: continuous batching over a SIRA-quantized paged KV
 cache.  Public API:
 
+* ``ServingConfig`` — validated engine configuration (slots, cache
+  geometry, quantized KV, speculation, prefix caching, mesh).
 * ``ServingEngine`` — jitted chunked prefill + batched decode, vectorized
   per-request sampling; paged mode with a static-batch fallback.
 * ``Request`` — prompt, max_new_tokens, temperature, eos_id.
 * ``Scheduler`` — FIFO admission, slot/page bookkeeping, termination,
   preemption.
 * ``PagedKVCache`` / ``KVCacheSpec`` / ``derive_kv_spec`` — paged pool
-  with per-layer int8 scales from SIRA range analysis (fp fallback).
+  with per-layer int8 scales from SIRA range analysis (fp fallback),
+  copy-on-write prefix sharing (``PrefixIndex``, refcounts, reuse LRU).
 * ``ServingMetrics`` — TTFT, token latency, tokens/s, slot occupancy,
-  speculative acceptance rate / tokens-per-step.
+  speculative acceptance rate / tokens-per-step, prefix hit rate,
+  latency percentiles.
 * ``DraftProposer`` / ``NgramDrafter`` — draft proposers for speculative
-  decoding (``ServingEngine(spec_decode="ngram", spec_k=4)``).
+  decoding (``ServingConfig(spec_decode="ngram", spec_k=4)``).
 """
+from .config import ServingConfig                              # noqa: F401
 from .draft import (DraftProposer, FixedDrafter,               # noqa: F401
                     NgramDrafter, get_drafter)
 from .engine import ServingEngine                              # noqa: F401
 from .scheduler import Request, Scheduler                      # noqa: F401
 from .kv_cache import (PagedKVCache, KVCacheSpec, LayerKVSpec,  # noqa: F401
-                       derive_kv_spec, observe_block_inputs)
+                       PrefixIndex, derive_kv_spec,
+                       observe_block_inputs)
 from .metrics import ServingMetrics                            # noqa: F401

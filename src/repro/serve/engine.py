@@ -31,9 +31,21 @@ stay allocated, no pool churn.  Because sampling is a deterministic
 function of (seed, request_id, token index, logits), acceptance is exact
 at any temperature: the emitted stream is bit-identical to per-token
 decoding, speculation only changes how many jitted steps it takes.
+
+Prefix caching (``ServingConfig(prefix_cache=True)``) makes prefill
+incremental across requests: the engine attaches the longest cached
+prefix of each new prompt (copy-on-write shared pages, see
+``kv_cache.PagedKVCache``) and recomputes only the suffix — emitted
+tokens are bit-identical to a cold prefill because the shared pages hold
+exactly the KV the slot would have recomputed.  A ``mesh`` on the config
+shards params and the KV page pools (KV-head dim over the "model" axis)
+and runs every jitted call under the mesh context for tensor-parallel
+decode.
 """
 from __future__ import annotations
 
+import contextlib
+import warnings
 from typing import List, Optional, Union
 
 import jax
@@ -44,36 +56,90 @@ from repro.models.transformer import Model
 from repro.obs.trace import get_tracer
 from repro.quant.quantizer import QuantSpec
 
+from .config import ServingConfig
 from .draft import DraftProposer, get_drafter
 from .kv_cache import KVCacheSpec, PagedKVCache, derive_kv_spec
 from .metrics import ServingMetrics
 from .scheduler import Request, Scheduler
 
+_SENTINEL = object()
+
+
+def _legacy_config(batch_slots, max_seq, quant, seed, kw) -> ServingConfig:
+    """Build a ServingConfig from the pre-config loose kwargs."""
+    fields = dict(batch_slots=batch_slots, max_seq=max_seq,
+                  quant=quant, seed=0 if seed is _SENTINEL else seed)
+    for k, v in kw.items():
+        if v is not _SENTINEL:
+            fields[k] = v
+    return ServingConfig(**fields)
+
 
 class ServingEngine:
-    def __init__(self, model: Model, params, batch_slots: int,
-                 max_seq: int, quant: Optional[QuantSpec] = None,
-                 seed: int = 0, *,
-                 kv_cache: Union[str, KVCacheSpec] = "fp",
-                 page_size: int = 8, prefill_chunk: int = 8,
-                 num_pages: Optional[int] = None,
-                 mode: Optional[str] = None,
-                 spec_decode: Union[str, DraftProposer, None] = None,
-                 spec_k: int = 4):
-        """kv_cache: "fp" | "sira-int8" | a prebuilt KVCacheSpec.
-        mode: None (auto), "paged", or "static" (the pre-scheduler
-        fixed-batch engine, kept for unpageable families and as the
-        benchmark baseline).
-        spec_decode: None (per-token decode), a drafter name ("ngram"),
-        or a DraftProposer — enables speculative decoding (paged mode
-        only).  spec_k: max draft tokens verified per decode step."""
+    def __init__(self, model: Model, params,
+                 config: Union[ServingConfig, int, None] = None,
+                 max_seq: Optional[int] = None,
+                 quant: Optional[QuantSpec] = None,
+                 seed=_SENTINEL, *,
+                 batch_slots: Optional[int] = None,
+                 kv_cache=_SENTINEL, page_size=_SENTINEL,
+                 prefill_chunk=_SENTINEL, num_pages=_SENTINEL,
+                 mode=_SENTINEL, spec_decode=_SENTINEL,
+                 spec_k=_SENTINEL):
+        """Preferred: ``ServingEngine(model, params, ServingConfig(...))``
+        — every knob lives on :class:`ServingConfig`, validated there.
+
+        The pre-config surface (``batch_slots``/``max_seq`` positional or
+        keyword, loose ``kv_cache=…``/``page_size=…``/… kwargs) still
+        works through a shim that assembles the equivalent config and
+        emits one ``DeprecationWarning`` per construction."""
+        legacy_kw = dict(kv_cache=kv_cache, page_size=page_size,
+                         prefill_chunk=prefill_chunk, num_pages=num_pages,
+                         mode=mode, spec_decode=spec_decode, spec_k=spec_k)
+        if isinstance(config, ServingConfig):
+            if (max_seq is not None or quant is not None or
+                    seed is not _SENTINEL or batch_slots is not None or
+                    any(v is not _SENTINEL for v in legacy_kw.values())):
+                raise TypeError(
+                    "pass every option on the ServingConfig — mixing a "
+                    "config with loose legacy kwargs is ambiguous")
+            cfg = config
+        else:
+            if isinstance(config, int):          # legacy positional
+                if batch_slots is not None:
+                    raise TypeError("batch_slots given twice")
+                batch_slots = config
+            elif config is not None:
+                raise TypeError(
+                    f"third argument must be a ServingConfig (or the "
+                    f"legacy batch_slots int), got {type(config).__name__}")
+            if batch_slots is None or max_seq is None:
+                raise TypeError(
+                    "ServingEngine needs a ServingConfig (or legacy "
+                    "batch_slots + max_seq)")
+            warnings.warn(
+                "loose ServingEngine(...) kwargs are deprecated — "
+                "construct a repro.serve.ServingConfig and pass it as "
+                "the third argument",
+                DeprecationWarning, stacklevel=2)
+            cfg = _legacy_config(batch_slots, max_seq, quant, seed,
+                                 legacy_kw)
+
+        self.config = cfg
         self.model = model
+        self.B = cfg.batch_slots
+        self.S = cfg.max_seq
+        self.quant = cfg.quant
+        self.seed = seed = cfg.seed
+        self.prefill_chunk = cfg.prefill_chunk
+        self.mesh = cfg.mesh
+        quant = cfg.quant
+        if self.mesh is not None:
+            from repro.launch.shardings import named, param_pspecs
+            params = jax.device_put(
+                params, named(self.mesh, param_pspecs(params), params))
         self.params = params
-        self.B = batch_slots
-        self.S = max_seq
-        self.quant = quant
-        self.seed = seed
-        self.prefill_chunk = prefill_chunk
+        mode = cfg.mode
         if mode is None:
             mode = "paged" if model.supports_paged else "static"
         if mode == "paged" and not model.supports_paged:
@@ -81,21 +147,23 @@ class ServingEngine:
                 f"paged serving needs full-context attention — "
                 f"family={model.cfg.family!r} "
                 f"sliding_window={model.cfg.sliding_window}")
-        if mode == "static" and kv_cache != "fp":
-            raise ValueError(
-                "static mode serves a full-precision cache — a quantized "
-                "kv_cache would be silently ignored")
         self.mode = mode
-        if spec_decode is not None and mode != "paged":
+        if cfg.spec_decode is not None and mode != "paged":
             raise NotImplementedError(
                 "speculative decoding requires paged mode (the static "
                 "engine has no per-slot length pointers to roll back)")
-        if spec_k < 1:
-            raise ValueError("spec_k must be >= 1")
         self.drafter: Optional[DraftProposer] = (
-            get_drafter(spec_decode) if isinstance(spec_decode, str)
-            else spec_decode)
-        self.spec_k = spec_k
+            get_drafter(cfg.spec_decode)
+            if isinstance(cfg.spec_decode, str) else cfg.spec_decode)
+        self.spec_k = cfg.spec_k
+        if mode == "static" and cfg.kv_cache != "fp":
+            raise ValueError(
+                "static mode serves a full-precision cache — a quantized "
+                "kv_cache would be silently ignored")
+        if mode == "static" and cfg.prefix_cache:
+            raise ValueError(
+                "prefix_cache requires paged mode (the static engine "
+                "has no page table to share)")
 
         def sample(logits, temps, rids, steps):
             lg = logits.astype(jnp.float32)
@@ -113,23 +181,30 @@ class ServingEngine:
         self._sample_fn = jax.jit(sample)
 
         if mode == "paged":
-            cfg = model.cfg
-            if isinstance(kv_cache, KVCacheSpec):
-                spec = kv_cache
-            elif kv_cache == "fp":
-                spec = KVCacheSpec.all_fp(cfg.n_layers)
-            elif kv_cache in ("sira-int8", "int8"):
+            mcfg = model.cfg
+            if isinstance(cfg.kv_cache, KVCacheSpec):
+                spec = cfg.kv_cache
+            elif cfg.kv_cache == "fp":
+                spec = KVCacheSpec.all_fp(mcfg.n_layers)
+            else:                       # "sira-int8" / "int8" (validated)
                 spec = derive_kv_spec(model, params)
-            else:
-                raise ValueError(f"unknown kv_cache {kv_cache!r}")
             self.kv_spec = spec
-            self.cache = PagedKVCache(cfg, spec, batch_slots, max_seq,
-                                      page_size=page_size,
-                                      num_pages=num_pages)
+            pool_sharding = None
+            if self.mesh is not None:
+                from repro.launch.shardings import kv_pool_sharding
+                pool_sharding = kv_pool_sharding(self.mesh,
+                                                 mcfg.n_kv_heads)
+            self.cache = PagedKVCache(mcfg, spec, cfg.batch_slots,
+                                      cfg.max_seq,
+                                      page_size=cfg.page_size,
+                                      num_pages=cfg.num_pages,
+                                      prefix_cache=cfg.prefix_cache,
+                                      sharding=pool_sharding)
             self.metrics = ServingMetrics()
-            self.scheduler = Scheduler(batch_slots, max_seq, self.cache,
-                                       self.metrics)
+            self.scheduler = Scheduler(cfg.batch_slots, cfg.max_seq,
+                                       self.cache, self.metrics)
             kv_scales = spec.scales()
+            page_size = cfg.page_size
             self._step_fn = jax.jit(
                 lambda p, t, pages, table, lens: model.decode_paged(
                     p, t, pages, table, lens, page_size=page_size,
@@ -138,6 +213,14 @@ class ServingEngine:
             self._decode = jax.jit(
                 lambda p, t, c, i, v: model.decode_step(
                     p, t, c, i, quant=quant, valid_from=v))
+
+    def _mesh_scope(self):
+        """Mesh context for jitted calls — activates the in-model
+        ``shard()`` constraints; a no-op without a configured mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.launch.mesh import use_mesh
+        return use_mesh(self.mesh)
 
     # ------------------------------------------------------- paged mode
     def submit(self, request: Request) -> int:
@@ -176,35 +259,54 @@ class ServingEngine:
     def _prefill(self, slot: int, entry) -> None:
         """Chunked jitted multi-token prefill of one slot (B=1): one
         ``decode_paged`` call per ``prefill_chunk`` tokens, then sample
-        the first continuation token from the last prompt position."""
+        the first continuation token from the last prompt position.
+
+        With prefix caching the slot first attaches the longest cached
+        prefix of its sequence (shared pages, refcounted; the mid-page
+        boundary copied) and prefill recomputes only the suffix — same
+        logits, fewer chunks.  After the prompt is in the cache its full
+        pages are registered for the next request to attach."""
         seq = entry.seq
         L = len(seq)
         C = self.prefill_chunk
+        cached = self.cache.attach_prefix(slot, seq)
+        # defensive: every page at/above the recompute frontier must be
+        # private before prefill writes land (no-op by construction —
+        # attach copies the boundary page)
+        assert self.cache.prepare_write(slot, cached)
+        if self.cache.prefix_cache_enabled:
+            self.metrics.on_prefix_lookup(cached, L)
         table = self.cache.slot_table(slot)
         logits = None
         tr = get_tracer()
         with tr.span("serve:prefill", slot=slot, prompt_tokens=L,
-                     chunk=C):
-            for start in range(0, L, C):
+                     chunk=C, cached_tokens=cached):
+            for start in range(cached, L, C):
                 chunk = seq[start:start + C]
                 toks = np.zeros((1, C), np.int32)
                 toks[0, :len(chunk)] = chunk
                 with tr.span("serve:prefill_chunk", start=start):
-                    logits, pages = self._step_fn(
-                        self.params, jnp.asarray(toks),
-                        self.cache.pages, table,
-                        jnp.full((1,), start, jnp.int32))
+                    with self._mesh_scope():
+                        logits, pages = self._step_fn(
+                            self.params, jnp.asarray(toks),
+                            self.cache.pages, table,
+                            jnp.full((1,), start, jnp.int32))
                 self.cache.pages = pages
                 self.metrics.on_prefill_chunk()
         self.scheduler.set_prefilled(slot, L)
+        # register before the first record_token: a request finishing on
+        # its very first token releases the slot right there, and only
+        # registered pages park in the reuse LRU
+        self.cache.register_prefix(slot, seq[:len(entry.request.prompt)])
 
         req = entry.request
-        last = (L - 1) % C          # last real prompt token in final chunk
-        tok = self._sample_fn(
-            logits[:, last],
-            jnp.full((1,), req.temperature, jnp.float32),
-            jnp.full((1,), entry.prng_id, jnp.int32),
-            jnp.full((1,), entry.n_generated, jnp.int32))
+        last = (L - 1 - cached) % C    # last prompt token in final chunk
+        with self._mesh_scope():
+            tok = self._sample_fn(
+                logits[:, last],
+                jnp.full((1,), req.temperature, jnp.float32),
+                jnp.full((1,), entry.prng_id, jnp.int32),
+                jnp.full((1,), entry.n_generated, jnp.int32))
         handle = entry.handle
         done = self.scheduler.record_token(slot, int(np.asarray(tok)[0]))
         self.metrics.on_token(handle)
@@ -230,11 +332,13 @@ class ServingEngine:
                     break
                 props = proposals.get(i) if proposals else None
                 if props and self.cache.reserve(
-                        i, st.length + 1 + self.spec_k):
+                        i, st.length + 1 + self.spec_k) and \
+                        self.cache.prepare_write(i, st.length):
                     break
                 if props:
                     proposals[i] = []
-                if self.cache.grow(i, st.length + 1):
+                if self.cache.grow(i, st.length + 1) and \
+                        self.cache.prepare_write(i, st.length):
                     break
                 sched.preempt(sched.newest_active())
 
@@ -262,13 +366,14 @@ class ServingEngine:
             temps[i] = st.entry.request.temperature
             rids[i] = st.entry.prng_id
             steps[i] = st.entry.n_generated
-        logits, pages = self._step_fn(
-            self.params, jnp.asarray(toks)[:, None], self.cache.pages,
-            self.cache.device_table(), jnp.asarray(lens))
-        self.cache.pages = pages
-        nxt = np.asarray(self._sample_fn(
-            logits[:, -1], jnp.asarray(temps), jnp.asarray(rids),
-            jnp.asarray(steps)))
+        with self._mesh_scope():
+            logits, pages = self._step_fn(
+                self.params, jnp.asarray(toks)[:, None], self.cache.pages,
+                self.cache.device_table(), jnp.asarray(lens))
+            self.cache.pages = pages
+            nxt = np.asarray(self._sample_fn(
+                logits[:, -1], jnp.asarray(temps), jnp.asarray(rids),
+                jnp.asarray(steps)))
         self.metrics.on_decode_step(len(active), B, tokens=len(active))
         for i in active:
             sched.note_cache_write(i)
@@ -331,9 +436,10 @@ class ServingEngine:
             row = [st.entry.seq[-1]] + proposals.get(i, [])
             toks[i, :len(row)] = row
             lens[i] = st.length
-        logits, pages = self._step_fn(
-            self.params, jnp.asarray(toks), self.cache.pages,
-            self.cache.device_table(), jnp.asarray(lens))
+        with self._mesh_scope():
+            logits, pages = self._step_fn(
+                self.params, jnp.asarray(toks), self.cache.pages,
+                self.cache.device_table(), jnp.asarray(lens))
         self.cache.pages = pages
 
         # sample every verify position in one vectorized call: row (i, t)
@@ -439,10 +545,11 @@ class ServingEngine:
             valid[i] = L - len(r.prompt)             # first real slot
         valid_from = jnp.asarray(valid) if needs_mask else None
         logits = None
-        for t in range(L):
-            logits, cache = self._decode(
-                self.params, jnp.asarray(toks[:, t:t + 1]), cache,
-                jnp.asarray(t, jnp.int32), valid_from)
+        with self._mesh_scope():
+            for t in range(L):
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(toks[:, t:t + 1]), cache,
+                    jnp.asarray(t, jnp.int32), valid_from)
 
         n = len(requests)
         temps = np.zeros((self.B,), np.float32)
@@ -468,9 +575,11 @@ class ServingEngine:
                 done[i] = True
         step = 1
         while not done.all():
-            logits, cache = self._decode(
-                self.params, jnp.asarray(cur).reshape(self.B, 1), cache,
-                jnp.asarray(L + step - 1, jnp.int32), valid_from)
+            with self._mesh_scope():
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(cur).reshape(self.B, 1),
+                    cache, jnp.asarray(L + step - 1, jnp.int32),
+                    valid_from)
             cur = sample(logits)
             for i, r in enumerate(requests):
                 if done[i]:

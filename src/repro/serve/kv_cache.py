@@ -24,12 +24,30 @@ Two halves:
   without sizing HBM for the worst case.  Physical page 0 is reserved as
   the trash page: idle slots' writes land there and it is never mapped
   to a live position.
+
+* **Copy-on-write prefix caching** (``prefix_cache=True``): prompt pages
+  are content-addressed in a :class:`PrefixIndex` keyed by the *chain*
+  of page token-tuples (a page's identity includes everything before
+  it, so position is part of the key and RoPE'd keys stay valid).  A
+  new request attaches the longest indexed chain instead of re-running
+  prefill over it; attached pages are mapped by multiple slots with
+  per-page refcounts.  Pages released by finished requests stay
+  resident in an LRU of cached-free pages and are only reclaimed (and
+  unindexed) when the free list runs dry — repeat traffic re-attaches
+  them for near-zero-TTFT prefill.  Sharing is safe because a slot
+  only ever writes at positions >= its own recompute frontier: the
+  boundary page (where the new prompt diverges mid-page) is
+  copy-on-written into the slot's private page at attach time, and
+  ``prepare_write`` forks any other shared page before a write could
+  land on it — so a speculative rollback on one request can never
+  scribble on a page another request maps.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-from typing import Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -176,6 +194,103 @@ def derive_kv_spec(model, params, *, x_range: Tuple[float, float] = (-4., 4.),
     return KVCacheSpec(tuple(layers))
 
 
+_Key = Tuple  # (parent_key | None, page-token tuple) — recursive
+
+
+class PrefixIndex:
+    """Content-addressed index of full prompt pages for prefix sharing.
+
+    A page is keyed by ``(parent_key, tokens)`` where ``parent_key`` is
+    the key of the page before it (``None`` at position 0) and ``tokens``
+    is the page's full token tuple.  Keying by chain rather than by page
+    content alone makes position part of the identity — two requests
+    share a page only when *everything* up to and including it is
+    identical, which is exactly the condition under which the stored
+    (RoPE-rotated, possibly int8-quantized) KV is bit-identical.
+    """
+
+    def __init__(self) -> None:
+        self._page_of: Dict[_Key, int] = {}
+        self._key_of: Dict[int, _Key] = {}
+        self._kids: Dict[Optional[_Key], Set[_Key]] = {}
+
+    def __len__(self) -> int:
+        return len(self._page_of)
+
+    def is_registered(self, page: int) -> bool:
+        return page in self._key_of
+
+    def lookup(self, chunks: Sequence[Tuple[int, ...]]) -> List[int]:
+        """Physical pages of the longest indexed chain matching the
+        per-page token chunks, in position order."""
+        pages: List[int] = []
+        parent: Optional[_Key] = None
+        for chunk in chunks:
+            key = (parent, chunk)
+            pg = self._page_of.get(key)
+            if pg is None:
+                break
+            pages.append(pg)
+            parent = key
+        return pages
+
+    def partial_lookup(self, n_matched: int,
+                       chunks: Sequence[Tuple[int, ...]],
+                       tail: Tuple[int, ...]) -> Tuple[int, Optional[int]]:
+        """Best mid-page overlap after ``n_matched`` fully-matched chunks:
+        among the indexed children of the matched chain, the page whose
+        token tuple shares the longest common prefix with ``tail``.
+        Returns (overlap_tokens, physical_page | None)."""
+        parent: Optional[_Key] = None
+        for chunk in chunks[:n_matched]:
+            parent = (parent, chunk)
+        best_m, best_pg = 0, None
+        for key in self._kids.get(parent, ()):
+            chunk = key[1]
+            m = 0
+            while m < len(tail) and m < len(chunk) and tail[m] == chunk[m]:
+                m += 1
+            if m > best_m:
+                best_m, best_pg = m, self._page_of[key]
+        return best_m, best_pg
+
+    def register(self, chunks: Sequence[Tuple[int, ...]],
+                 pages: Sequence[int]) -> List[int]:
+        """Walk the chain, adding nodes for chunks not yet indexed
+        (existing nodes win — the walker's duplicate page stays private).
+        Returns the pages newly registered."""
+        parent: Optional[_Key] = None
+        new: List[int] = []
+        for chunk, pg in zip(chunks, pages):
+            key = (parent, chunk)
+            if key not in self._page_of:
+                self._page_of[key] = pg
+                self._key_of[pg] = key
+                self._kids.setdefault(parent, set()).add(key)
+                new.append(pg)
+            parent = key
+        return new
+
+    def evict(self, page: int) -> List[int]:
+        """Drop the node owning ``page`` and its entire subtree (children
+        would be unreachable without their parent).  Returns every page
+        whose registration was removed, ``page`` first."""
+        key = self._key_of[page]
+        parent = key[0]
+        kids = self._kids.get(parent)
+        if kids is not None:
+            kids.discard(key)
+        dropped: List[int] = []
+        stack = [key]
+        while stack:
+            k = stack.pop()
+            pg = self._page_of.pop(k)
+            self._key_of.pop(pg, None)
+            stack.extend(self._kids.pop(k, ()))
+            dropped.append(pg)
+        return dropped
+
+
 class PagedKVCache:
     """Shared physical page pool + host-side page table / free list.
 
@@ -183,11 +298,20 @@ class PagedKVCache:
     (num_pages, page_size, KV, hd) — int8 for SIRA-certified layers, fp
     otherwise.  The jitted step functions consume/return the pools; the
     table and free list are plain numpy/python updated between steps.
+
+    With ``prefix_cache=True`` pages carry refcounts (``ref[p]`` = slots
+    mapping page p), full prompt pages are registered in a
+    :class:`PrefixIndex`, and released pages whose content is indexed
+    move to a cached-free LRU instead of the free list.  ``sharding``
+    (a ``jax.sharding.Sharding``) places the page pools — the serving
+    path shards the KV-head dim over the mesh's "model" axis so each
+    device holds its own shard of every page.
     """
 
     def __init__(self, cfg, spec: KVCacheSpec, batch_slots: int,
                  max_seq: int, page_size: int = 16,
-                 num_pages: Optional[int] = None, fp_dtype=None):
+                 num_pages: Optional[int] = None, fp_dtype=None,
+                 prefix_cache: bool = False, sharding=None):
         assert len(spec.layers) == cfg.n_layers
         self.cfg = cfg
         self.spec = spec
@@ -201,37 +325,184 @@ class PagedKVCache:
         KV, hd = cfg.n_kv_heads, cfg.hd
         fp_dtype = fp_dtype or cfg.dtype
         shape = (self.num_pages, page_size, KV, hd)
+
+        def pool(dtype):
+            z = jnp.zeros(shape, dtype)
+            return jax.device_put(z, sharding) if sharding is not None \
+                else z
+
         self.pages = [
-            {"k": jnp.zeros(shape, jnp.int8 if l.int8 else fp_dtype),
-             "v": jnp.zeros(shape, jnp.int8 if l.int8 else fp_dtype)}
+            {"k": pool(jnp.int8 if l.int8 else fp_dtype),
+             "v": pool(jnp.int8 if l.int8 else fp_dtype)}
             for l in spec.layers]
         self.table = np.zeros((batch_slots, self.max_pages), np.int32)
         self.free: List[int] = list(range(self.num_pages - 1, 0, -1))
         self.owned: List[List[int]] = [[] for _ in range(batch_slots)]
+        # --- prefix sharing state (inert when prefix_cache is False) ---
+        self.prefix_cache_enabled = prefix_cache
+        self.index: Optional[PrefixIndex] = \
+            PrefixIndex() if prefix_cache else None
+        self.ref = np.zeros(self.num_pages, np.int32)   # slots mapping p
+        # cached-free pages: ref == 0 but content still indexed; ordered
+        # oldest-released first so reclamation evicts the coldest prefix
+        self.lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self.forks = 0                # copy-on-write page copies performed
 
     # ------------------------------------------------------- allocation
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def _take_page(self) -> Optional[int]:
+        """A writable page: the free list first, else reclaim the
+        oldest cached-free page (evicting its prefix subtree — orphaned
+        descendants drop from the LRU to the free list)."""
+        if self.free:
+            return self.free.pop()
+        if self.lru:
+            pg, _ = self.lru.popitem(last=False)
+            for dropped in self.index.evict(pg):
+                if dropped != pg and dropped in self.lru:
+                    del self.lru[dropped]
+                    self.free.append(dropped)
+            return pg
+        return None
+
     def grow(self, slot: int, new_len: int) -> bool:
         """Ensure the slot maps every logical position < new_len.
 
         Returns False (no change) when the pool cannot satisfy it — the
-        scheduler then preempts or defers admission."""
+        scheduler then preempts or defers admission.  Cached-free LRU
+        pages count as available: they are reclaimed on demand."""
         need = self.pages_for(new_len) - len(self.owned[slot])
-        if need > len(self.free):
+        if need > len(self.free) + len(self.lru):
             return False
         for _ in range(max(need, 0)):
-            pg = self.free.pop()
+            pg = self._take_page()
+            self.ref[pg] = 1
             self.table[slot, len(self.owned[slot])] = pg
             self.owned[slot].append(pg)
         return True
 
+    def _drop_ref(self, pg: int) -> None:
+        self.ref[pg] -= 1
+        assert self.ref[pg] >= 0, "page refcount underflow"
+        if self.ref[pg] == 0:
+            if self.index is not None and self.index.is_registered(pg):
+                self.lru[pg] = None          # most-recently released
+            else:
+                self.free.append(pg)
+
     def release(self, slot: int) -> None:
-        """Return the slot's pages to the pool (request finished/evicted)."""
-        self.free.extend(reversed(self.owned[slot]))
+        """Return the slot's pages to the pool (request finished/evicted).
+
+        Shared pages survive under their other mappings; pages whose
+        content is registered in the prefix index park in the LRU."""
+        for pg in reversed(self.owned[slot]):
+            self._drop_ref(pg)
         self.owned[slot] = []
         self.table[slot, :] = 0
+
+    # ---------------------------------------------------- prefix sharing
+    def _chunks(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        ps = self.page_size
+        return [tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+                for j in range(len(tokens) // ps)]
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        for pool in self.pages:
+            pool["k"] = pool["k"].at[dst].set(pool["k"][src])
+            pool["v"] = pool["v"].at[dst].set(pool["v"][src])
+
+    def attach_prefix(self, slot: int, tokens: Sequence[int]) -> int:
+        """Map the longest cached prefix of ``tokens`` into the slot,
+        swapping out the private pages admission allocated (each swap
+        frees one private page, so attachment never needs allocation).
+
+        Fully-matched pages are *shared*: mapped with a refcount bump,
+        never written (the slot's writes all land at positions >= the
+        returned frontier).  A mid-page overlap at the boundary is
+        *copied* into the slot's own private page — copy-on-write done
+        eagerly, because the slot will write the divergent suffix of
+        that very page during prefill.
+
+        Returns the recompute frontier: the number of leading tokens
+        whose KV is already in the cache (< len(tokens); the last token
+        is always recomputed so prefill has logits to sample from).
+        """
+        if self.index is None or len(tokens) < 2:
+            return 0
+        chunks = self._chunks(tokens)
+        shared = self.index.lookup(chunks)
+        ps = self.page_size
+        matched = len(shared) * ps
+        part_m, part_pg = self.index.partial_lookup(
+            len(shared), chunks,
+            tuple(int(t) for t in tokens[len(shared) * ps:]))
+        cached = min(matched + part_m, len(tokens) - 1)
+        if cached <= 0:
+            return 0
+        n_full = cached // ps
+        for j, pg in enumerate(shared[:n_full]):
+            priv = self.owned[slot][j]
+            assert priv != pg, "slot already maps an indexed page"
+            if pg in self.lru:
+                del self.lru[pg]
+            self.ref[pg] += 1
+            self.table[slot, j] = pg
+            self.owned[slot][j] = pg
+            self._drop_ref(priv)
+        if cached % ps:
+            # boundary page: diverges (or ends) mid-page — copy content
+            # into the private page admission gave us, don't alias it
+            src = shared[n_full] if n_full < len(shared) else part_pg
+            self._copy_page(src, self.owned[slot][n_full])
+            self.forks += 1
+        return cached
+
+    def register_prefix(self, slot: int, tokens: Sequence[int]) -> int:
+        """Index the slot's fully-written prompt pages (full pages only —
+        a partly-filled tail page will still be written).  First writer
+        wins: chunks already indexed keep their existing page and the
+        slot's duplicate stays private.  Returns pages newly indexed."""
+        if self.index is None:
+            return 0
+        chunks = self._chunks(tokens)
+        pages = [int(self.table[slot, j]) for j in range(len(chunks))]
+        return len(self.index.register(chunks, pages))
+
+    def prepare_write(self, slot: int, start_pos: int) -> bool:
+        """Fork-on-write guard: any page the slot maps at positions
+        >= ``start_pos`` that is also visible elsewhere (mapped by
+        another slot, or reachable through the prefix index) is forked
+        to a private copy before the write.  In the normal serving flow
+        this is a no-op — slots only write above their attach frontier,
+        which lands in private pages — but it is what makes the
+        reserve/rollback contract survive sharing: a speculative window
+        (and its rolled-back garbage) can only ever touch pages no one
+        else maps.  Returns False when a fork cannot be allocated."""
+        if self.index is None:
+            return True
+        for j in range(start_pos // self.page_size,
+                       len(self.owned[slot])):
+            pg = self.owned[slot][j]
+            if self.ref[pg] > 1 or self.index.is_registered(pg):
+                if not self._fork(slot, j):
+                    return False
+        return True
+
+    def _fork(self, slot: int, j: int) -> bool:
+        old = self.owned[slot][j]
+        new = self._take_page()
+        if new is None:
+            return False
+        self._copy_page(old, new)
+        self.ref[new] = 1
+        self.table[slot, j] = new
+        self.owned[slot][j] = new
+        self._drop_ref(old)
+        self.forks += 1
+        return True
 
     # ------------------------------------------------- speculative window
     def reserve(self, slot: int, new_len: int) -> bool:
@@ -263,7 +534,20 @@ class PagedKVCache:
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - 1 - len(self.free)
+        """Pages mapped by live slots (cached-free LRU pages excluded —
+        they are reclaimable on demand, not in use)."""
+        return self.num_pages - 1 - len(self.free) - len(self.lru)
+
+    @property
+    def cached_pages(self) -> int:
+        """Cached-free pages held for prefix reuse (the LRU)."""
+        return len(self.lru)
+
+    @property
+    def shared_pool_occupancy(self) -> float:
+        """Fraction of the pool physically holding data — live mappings
+        plus cached prefixes (the trash page excluded)."""
+        return (self.num_pages - 1 - len(self.free)) / (self.num_pages - 1)
 
     def hbm_bytes(self) -> int:
         return sum(p["k"].nbytes + p["v"].nbytes for p in self.pages)

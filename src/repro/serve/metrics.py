@@ -16,6 +16,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.obs.metrics import MetricsRegistry
 
 
@@ -80,6 +82,14 @@ class ServingMetrics:
             "serving_spec_proposed_total", "draft tokens proposed")
         self._spec_accepted = r.counter(
             "serving_spec_accepted_total", "draft tokens accepted")
+        self._prefix_lookups = r.counter(
+            "serving_prefix_lookups_total", "prefix-cache lookups")
+        self._prefix_hit_tokens = r.counter(
+            "serving_prefix_hit_tokens_total",
+            "prompt tokens served from cached prefix pages")
+        self._prefix_lookup_tokens = r.counter(
+            "serving_prefix_lookup_tokens_total",
+            "prompt tokens that went through prefix lookup")
         self._submitted = r.counter(
             "serving_requests_total", "requests submitted")
         self._tokens = r.counter(
@@ -180,6 +190,14 @@ class ServingMetrics:
         self._preemptions.inc()
         self.requests[request_id].preemptions += 1
 
+    def on_prefix_lookup(self, cached_tokens: int,
+                         prompt_tokens: int) -> None:
+        """One prefill consulted the prefix cache: ``cached_tokens`` of
+        its ``prompt_tokens`` were attached instead of recomputed."""
+        self._prefix_lookups.inc()
+        self._prefix_hit_tokens.inc(cached_tokens)
+        self._prefix_lookup_tokens.inc(prompt_tokens)
+
     # ------------------------------------------------------- aggregates
     @property
     def total_tokens(self) -> int:
@@ -222,6 +240,41 @@ class ServingMetrics:
         return self.spec_accepted / self.spec_proposed
 
     @property
+    def prefix_lookups(self) -> int:
+        return int(self._prefix_lookups.value)
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return int(self._prefix_hit_tokens.value)
+
+    @property
+    def prefix_lookup_tokens(self) -> int:
+        return int(self._prefix_lookup_tokens.value)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Prompt tokens attached from cached prefix pages / prompt
+        tokens that went through lookup.  Token-weighted (not
+        per-request) so one long cold prompt cannot be papered over by
+        many short hits."""
+        if not self.prefix_lookup_tokens:
+            return float("nan")
+        return self.prefix_hit_tokens / self.prefix_lookup_tokens
+
+    def ttft_percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of per-request TTFT, seconds."""
+        ts = [r.ttft for r in self.requests.values() if r.ttft is not None]
+        return float(np.percentile(ts, q)) if ts else float("nan")
+
+    def token_latency_percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of inter-token gaps, seconds."""
+        gaps: List[float] = []
+        for r in self.requests.values():
+            gaps.extend(b - a for a, b in zip(r.token_times,
+                                              r.token_times[1:]))
+        return float(np.percentile(gaps, q)) if gaps else float("nan")
+
+    @property
     def tokens_per_decode_step(self) -> float:
         """Generated tokens emitted per jitted decode call, per active
         slot (1.0 without speculation; up to 1 + spec_k with it)."""
@@ -245,4 +298,6 @@ class ServingMetrics:
             mean_token_latency_s=self.mean_token_latency,
             tokens_per_s=self.tokens_per_s,
             slot_occupancy=self.slot_occupancy,
+            prefix_lookups=self.prefix_lookups,
+            prefix_hit_rate=self.prefix_hit_rate,
         )

@@ -2,12 +2,16 @@
 bookkeeping, per-request termination, preemption.
 
 The scheduler owns *what runs where* — admission of queued requests into
-free batch slots (gated on page availability), per-request EOS /
-max-token termination (finished requests free their slot and pages
-immediately, mid-batch), and preemption of the newest-admitted request
-when the page pool runs dry (its sequence goes back to the queue front,
-preserving FIFO order, and is replayed by chunked prefill on
-re-admission).  The engine owns *how it runs* — the jitted model calls.
+free batch slots (gated on page availability; with prefix caching,
+cached-free LRU pages count as available and are reclaimed on demand),
+per-request EOS / max-token termination (finished requests free their
+slot and pages immediately, mid-batch — shared pages survive under
+their other mappings, indexed pages park in the reuse LRU), and
+preemption of the newest-admitted request when the page pool runs dry
+(its sequence goes back to the queue front, preserving FIFO order, and
+is replayed by chunked prefill on re-admission — a replay that
+re-attaches its own just-released prefix pages when they are still
+cached).  The engine owns *how it runs* — the jitted model calls.
 
 Invariant for an active slot: ``len(entry.seq) == state.length + 1`` —
 the sequence always ends with exactly one token that has been sampled
@@ -172,10 +176,11 @@ class Scheduler:
         self.slots[slot] = None
 
     def preempt(self, slot: int) -> int:
-        """Evict a running request: pages freed, sequence (prompt +
-        generated so far) back to the queue *front* — it was admitted
-        before anything still queued, so FIFO order is preserved.
-        Returns the preempted request id."""
+        """Evict a running request: pages freed (shared mappings just
+        drop a reference), sequence (prompt + generated so far) back to
+        the queue *front* — it was admitted before anything still
+        queued, so FIFO order is preserved.  Returns the preempted
+        request id."""
         st = self.slots[slot]
         self.cache.release(slot)
         self.slots[slot] = None

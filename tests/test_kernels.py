@@ -105,8 +105,8 @@ def test_quantize_sweep(qmin, qmax, dtype):
 
 def test_kernel_pipeline_matches_streamlined_graph():
     """int_matmul + multithreshold == the SIRA-streamlined graph tail."""
-    from repro.core import (Graph, ScaledIntRange,
-                            convert_tails_to_thresholds, streamline)
+    from repro.core import (Graph, ScaledIntRange, SiraModel, Streamline,
+                            convert_tails_to_thresholds)
     rng = np.random.default_rng(3)
     K, M = 128, 128
     g = Graph(inputs=["X"], outputs=[])
@@ -128,7 +128,8 @@ def test_kernel_pipeline_matches_streamlined_graph():
     g.add_node("Quant", ["act", sa, za, ba], ["Y"], dict(signed=0))
     g.outputs = ["Y"]
     inp = {"X": ScaledIntRange(lo=np.asarray(-1.0), hi=np.asarray(1.0))}
-    res = streamline(g, inp)
+    model, _ = Streamline().apply(SiraModel(g.copy(), inp))
+    res = model.metadata["aggregation"]
     g2, specs = convert_tails_to_thresholds(res.graph, inp)
     assert len(specs) == 1
 

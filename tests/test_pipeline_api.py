@@ -12,9 +12,22 @@ from repro.core import (BuildConfig, ConvertTailsToThresholds,
                         RemoveIdentityOps, ScaledIntRange, SiraModel,
                         Streamline, VerifyRanges, analysis_calls, analyze,
                         build_flow, convert_tails_to_thresholds,
-                        datatype_bound_bits, register_op, streamline)
+                        datatype_bound_bits, register_op)
 from repro.core import ops as ops_mod
 from repro.core.workloads import WORKLOADS, make_tfc
+
+
+def _function_streamline(graph, input_ranges):
+    """The old function-style streamlining path, built directly from the
+    in-place graph-rewrite cores (the loose shims are gone)."""
+    from repro.core.streamline import (aggregate_with_ranges,
+                                       duplicate_shared_constants_inplace,
+                                       explicitize_quantizers_inplace)
+    g = graph.copy()
+    explicitize_quantizers_inplace(g)
+    duplicate_shared_constants_inplace(g)
+    res, _ = aggregate_with_ranges(g, analyze(g, input_ranges))
+    return res
 
 
 # --------------------------------------------------------------------------
@@ -159,37 +172,32 @@ def test_streamline_pass_semantically_stable():
 # old shims == new passes
 # --------------------------------------------------------------------------
 
-def test_deprecated_function_entry_points_warn():
-    """The pre-SiraModel function-style API is deprecated: every loose
-    entry point in core.streamline emits a DeprecationWarning naming its
-    pass-based replacement (the result is still correct — the shim tests
-    below run with warnings suppressed by default pytest config)."""
-    from repro.core.streamline import (aggregate_scales_biases,
-                                       duplicate_shared_constants,
-                                       explicitize_quantizers)
-    wl = make_tfc()
-    with pytest.warns(DeprecationWarning, match="streamline\\(\\) is"):
-        streamline(wl.graph, wl.input_range)
-    with pytest.warns(DeprecationWarning,
-                      match="aggregate_scales_biases"):
-        aggregate_scales_biases(wl.graph, wl.input_range)
-    with pytest.warns(DeprecationWarning, match="ExplicitizeQuantizers"):
-        explicitize_quantizers(wl.graph)
-    with pytest.warns(DeprecationWarning, match="AggregateScalesBiases"):
-        duplicate_shared_constants(wl.graph)
-    # each call warns exactly once (streamline delegates internally
-    # without re-warning)
-    import warnings as _w
-    with _w.catch_warnings(record=True) as caught:
-        _w.simplefilter("always")
-        streamline(wl.graph, wl.input_range)
-    assert sum(issubclass(w.category, DeprecationWarning)
-               for w in caught) == 1
+def test_deprecated_function_entry_points_removed():
+    """The pre-SiraModel function-style streamlining API finished its
+    deprecation cycle: the loose shims no longer exist anywhere — not in
+    core.streamline, not re-exported from repro.core.  Only the in-place
+    cores and the pass classes remain."""
+    import repro.core as core
+    from repro.core import streamline as sl_mod
+    for name in ("streamline", "aggregate_scales_biases",
+                 "explicitize_quantizers", "duplicate_shared_constants",
+                 "_aggregate_scales_biases", "_warn_deprecated"):
+        assert not hasattr(sl_mod, name), name
+    # repro.core.streamline resolves to the *module*, never the function
+    assert core.streamline is sl_mod
+    for name in ("aggregate_scales_biases", "explicitize_quantizers",
+                 "duplicate_shared_constants"):
+        assert not hasattr(core, name), name
+    # the cores and pass entry points are still there
+    assert callable(sl_mod.explicitize_quantizers_inplace)
+    assert callable(sl_mod.duplicate_shared_constants_inplace)
+    assert callable(sl_mod.aggregate_with_ranges)
+    assert callable(core.remove_identity_ops)
 
 
 def test_old_shim_equals_new_pass_path_on_tfc():
     wl = make_tfc()
-    res = streamline(wl.graph, wl.input_range)
+    res = _function_streamline(wl.graph, wl.input_range)
     g_old, specs_old = convert_tails_to_thresholds(res.graph,
                                                    wl.input_range)
 
@@ -235,7 +243,7 @@ def test_build_flow_single_analysis_for_unmodified_prefix():
 
 def test_build_flow_matches_old_function_path_numerically():
     wl = make_tfc()
-    res = streamline(wl.graph, wl.input_range)
+    res = _function_streamline(wl.graph, wl.input_range)
     g_old, _ = convert_tails_to_thresholds(res.graph, wl.input_range)
     result = build_flow(wl)
     rng = np.random.default_rng(0)

@@ -10,9 +10,15 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (Graph, ScaledIntRange, analyze,
-                        convert_tails_to_thresholds, streamline)
+from repro.core import (Graph, ScaledIntRange, SiraModel, Streamline,
+                        analyze, convert_tails_to_thresholds)
 from repro.core.verify import verify_ranges
+
+
+def _streamline(graph, input_ranges):
+    """Streamline through the pass API; returns the AggregationResult."""
+    model, _ = Streamline().apply(SiraModel(graph.copy(), input_ranges))
+    return model.metadata["aggregation"]
 
 
 def _random_qnn(seed: int, n_layers: int, wbits: int, abits: int,
@@ -84,7 +90,7 @@ def test_sira_soundness(seed, n_layers, wbits, abits, with_bn, signed_in):
 def test_streamline_equivalence(seed, n_layers, wbits, abits, with_bn):
     g = _random_qnn(seed, n_layers, wbits, abits, with_bn, True)
     inp = {"X": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
-    res = streamline(g, inp)
+    res = _streamline(g, inp)
     rng = np.random.default_rng(seed + 2)
     k = g.initializers["W0"].shape[0]
     for _ in range(5):
@@ -100,7 +106,7 @@ def test_streamline_equivalence(seed, n_layers, wbits, abits, with_bn):
 def test_threshold_equivalence(seed, wbits, abits, with_bn):
     g = _random_qnn(seed, 2, wbits, abits, with_bn, True)
     inp = {"X": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
-    res = streamline(g, inp)
+    res = _streamline(g, inp)
     g2, specs = convert_tails_to_thresholds(res.graph, inp)
     assert len(specs) >= 1
     rng = np.random.default_rng(seed + 3)
@@ -120,7 +126,7 @@ def test_accumulator_fit_property(seed):
     from repro.core import minimize_accumulators
     g = _random_qnn(seed, 2, 4, 4, True, True)
     inp = {"X": ScaledIntRange(lo=np.asarray(-2.0), hi=np.asarray(2.0))}
-    res = streamline(g, inp)
+    res = _streamline(g, inp)
     ranges = analyze(res.graph, inp)
     reps = minimize_accumulators(res.graph, inp, ranges=ranges)
     assert reps, "no integer matmuls revealed"

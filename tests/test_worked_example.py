@@ -3,9 +3,15 @@ values checked exactly, then streamlining + thresholding equivalence."""
 import numpy as np
 import pytest
 
-from repro.core import (Graph, ScaledIntRange, analyze,
-                        convert_tails_to_thresholds, minimize_accumulators,
-                        streamline)
+from repro.core import (Graph, ScaledIntRange, SiraModel, Streamline,
+                        analyze, convert_tails_to_thresholds,
+                        minimize_accumulators)
+
+
+def _streamline(graph, input_ranges):
+    """Streamline through the pass API; returns the AggregationResult."""
+    model, _ = Streamline().apply(SiraModel(graph.copy(), input_ranges))
+    return model.metadata["aggregation"]
 
 
 @pytest.fixture()
@@ -95,7 +101,7 @@ def test_output_quant_range(example):
 
 def test_streamline_structure_and_equivalence(example):
     g, inp = example
-    res = streamline(g, inp)
+    res = _streamline(g, inp)
     ops = [n.op_type for n in res.graph.nodes]
     # Fig 9 structure: Div→Quant→MatMul→Mul→Add→Relu→Div→Quant→Mul
     assert ops == ["Div", "Quant", "MatMul", "Mul", "Add", "Relu", "Div",
@@ -117,7 +123,7 @@ def test_streamline_structure_and_equivalence(example):
 
 def test_accumulator_bits(example):
     g, inp = example
-    res = streamline(g, inp)
+    res = _streamline(g, inp)
     reps = minimize_accumulators(res.graph, inp)
     assert len(reps) == 1
     # max |acc| = 96 → ceil(log2(97)) + 1 = 8 bits
@@ -127,7 +133,7 @@ def test_accumulator_bits(example):
 
 def test_threshold_conversion_exact(example):
     g, inp = example
-    res = streamline(g, inp)
+    res = _streamline(g, inp)
     g2, specs = convert_tails_to_thresholds(res.graph, inp)
     assert len(specs) == 1
     assert specs[0].thresholds.shape == (3, 15)     # 3 ch, 2^4-1 steps

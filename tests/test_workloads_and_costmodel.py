@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import (analyze, convert_tails_to_thresholds,
-                        minimize_accumulators, streamline)
+from repro.core import (SiraModel, Streamline, analyze,
+                        convert_tails_to_thresholds,
+                        minimize_accumulators)
 from repro.core.costmodel import (lut_composite_total, lut_threshold_total,
                                   select_tail_style, tail_cost,
                                   tpu_tail_bytes)
@@ -12,11 +13,17 @@ from repro.core.workloads import WORKLOADS, make_cnv, make_mnv1, make_rn8, \
     make_tfc
 
 
+def _streamline(graph, input_ranges):
+    """Streamline through the pass API; returns the AggregationResult."""
+    model, _ = Streamline().apply(SiraModel(graph.copy(), input_ranges))
+    return model.metadata["aggregation"]
+
+
 @pytest.mark.parametrize("maker", [make_tfc, make_cnv, make_rn8, make_mnv1])
 def test_workload_streamline_threshold_equivalence(maker):
     wl = maker()
     rng = np.random.default_rng(5)
-    res = streamline(wl.graph, wl.input_range)
+    res = _streamline(wl.graph, wl.input_range)
     g2, specs = convert_tails_to_thresholds(res.graph, wl.input_range)
     assert len(specs) >= 1
     lo = float(np.min(wl.input_range["X"].lo))
@@ -36,7 +43,7 @@ def test_accumulator_reduction_matches_paper_ballpark():
     bits_s, bits_d = [], []
     for maker in WORKLOADS.values():
         wl = maker()
-        res = streamline(wl.graph, wl.input_range)
+        res = _streamline(wl.graph, wl.input_range)
         reps = minimize_accumulators(res.graph, wl.input_range)
         bits_s += [r.sira_bits for r in reps]
         bits_d += [r.datatype_bits for r in reps]
