@@ -1,29 +1,77 @@
-"""End-to-end QAT training driver example: train a reduced assigned arch
-with w8a8 fake-quant for a few hundred steps, with checkpoint/resume.
+"""Accumulator-aware QAT example: train a small QNN under an
+accumulator-bit budget (A2Q/A2Q+ projection, ``repro.qat``), then run
+the trained weights through SIRA + the dataflow DSE and print the
+proven-bits / resource report — the paper stack's train -> analyze ->
+optimize -> price loop in one command.
 
-    PYTHONPATH=src python examples/train_qat.py            # ~2 min on CPU
-    PYTHONPATH=src python examples/train_qat.py --steps 300 --arch glm4-9b
+    PYTHONPATH=src python examples/train_qat.py                 # ~30 s
+    PYTHONPATH=src python examples/train_qat.py --budget 12
+    PYTHONPATH=src python examples/train_qat.py --budget 12 --zero-center
+    PYTHONPATH=src python examples/train_qat.py --budget 0      # off
+
+(The generic LM-arch QAT trainer lives at ``python -m
+repro.launch.train``; this example drives the accumulator-budget loop.)
 """
-import sys
+import argparse
 
-from repro.launch.train import main
+from repro.dataflow import compare_sira_vs_baseline
+from repro.qat import (QATConfig, check_budget_invariant,
+                       proven_layer_bits, run_qat)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=14,
+                    help="target accumulator bits per layer "
+                         "(0 = unconstrained)")
+    ap.add_argument("--zero-center", action="store_true",
+                    help="A2Q+ zero-centering variant (asymmetric caps; "
+                         "roughly 2x the feasible weight mass)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--hidden", type=int, nargs="+", default=[32, 32])
+    ap.add_argument("--weight-bits", type=int, default=4)
+    ap.add_argument("--act-bits", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--device", default="pynq-z1")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint/resume directory (optional)")
+    args = ap.parse_args()
+
+    cfg = QATConfig(budget=args.budget, zero_center=args.zero_center,
+                    steps=args.steps, hidden=tuple(args.hidden),
+                    weight_bits=args.weight_bits, act_bits=args.act_bits,
+                    seed=args.seed, ckpt_dir=args.ckpt_dir)
+    tag = (f"budget {args.budget}b"
+           + (" + zero-center" if args.zero_center else "")
+           if args.budget else "unconstrained")
+    print(f"=== accumulator-aware QAT: {tag}, "
+          f"w{cfg.weight_bits}a{cfg.act_bits}, {cfg.steps} steps ===")
+    res = run_qat(cfg)
+    if res.resumed_from:
+        print(f"resumed from step {res.resumed_from}")
+    print(f"task loss {res.losses[0]:.4f} -> {res.final_loss:.4f}")
+
+    result, bits = proven_layer_bits(res.model, res.state.params)
+    budgets = res.model.budgets()
+    print(f"\n{'layer':12s} {'K':>5s} {'budget':>7s} {'proven':>7s}")
+    for i, (b, budget) in enumerate(zip(bits, budgets)):
+        k = res.model.layer_dims[i][0]
+        tgt = f"{budget.bits}b" if budget else "-"
+        print(f"l{i}_matmul    {k:5d} {tgt:>7s} {b:6d}b")
+    if args.budget:
+        check_budget_invariant(res.model, res.state.params, bits)
+        print("A2Q invariant holds: proven bits <= budget on every layer")
+
+    comp = compare_sira_vs_baseline(result.model, device=args.device)
+    b = comp.baseline
+    print(f"\nDSE on {args.device} (SIRA vs datatype-bound baseline):")
+    print(f"  LUTs {b.luts:,.0f} -> {comp.sira.luts:,.0f} "
+          f"(-{comp.lut_reduction:.0%})")
+    print(f"  DSPs {b.dsps} -> {comp.sira.dsps} "
+          f"(-{comp.dsp_reduction:.0%})")
+    print(f"  mean accumulator {comp.mean_acc_bits_datatype:.1f}b -> "
+          f"{comp.mean_acc_bits_sira:.1f}b")
+
 
 if __name__ == "__main__":
-    args = sys.argv[1:]
-    defaults = ["--arch", "qwen2-1.5b", "--reduced", "--steps", "200",
-                "--batch", "8", "--seq", "64", "--quant-bits", "8",
-                "--ckpt-dir", "/tmp/repro_qat_ckpt", "--ckpt-every", "100"]
-    # user args override defaults
-    known = {a for a in args if a.startswith("--")}
-    merged = list(args)
-    i = 0
-    while i < len(defaults):
-        if defaults[i] not in known:
-            merged.append(defaults[i])
-            if i + 1 < len(defaults) and not defaults[i + 1].startswith("--"):
-                merged.append(defaults[i + 1])
-                i += 1
-        elif i + 1 < len(defaults) and not defaults[i + 1].startswith("--"):
-            i += 1
-        i += 1
-    raise SystemExit(main(merged))
+    main()

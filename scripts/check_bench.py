@@ -153,6 +153,40 @@ RULES = {
             "seconds": ("timing", None),
         },
     },
+    "BENCH_qat.json": {
+        "key": ("budget",),
+        "context": ("arch", "weight_bits", "act_bits", "zero_center",
+                    "steps", "seed", "device"),
+        "metrics": {
+            # the A2Q guarantee: SIRA-proven accumulator bits may never
+            # exceed the trained budget (min over constrained layers of
+            # budget - proven_bits; a theorem given the toz quantizer +
+            # frozen scales, so floor 0 is hard — emitted only on
+            # constrained rows)
+            "budget_headroom": ("ratio", 0.0),
+            # proven bits / layer counts are integers derived from the
+            # deterministic training run — exact
+            "constrained_layers": ("exact", None),
+            "proven_bits": ("exact", None),
+            "proven_bits_max": ("exact", None),
+            "proven_bits_sum": ("exact", None),
+            # DSE resources must be monotone non-increasing as the
+            # budget tightens (computed in-bench vs the previous,
+            # looser row) — any False is a cost-model ordering bug
+            "luts_le_prev": ("exact", None),
+            "dsps_le_prev": ("exact", None),
+            # analytical DSE estimates on the exported trained graph
+            "sira_luts": ("estimate", None),
+            "sira_dsps": ("estimate", None),
+            "baseline_luts": ("estimate", None),
+            "baseline_dsps": ("estimate", None),
+            # task loss: lower is better and load-insensitive, but it
+            # rides the fp stack across jax versions — gate it like a
+            # timing (order-of-magnitude guard, not a band)
+            "task_loss": ("timing", None),
+            "seconds": ("timing", None),
+        },
+    },
 }
 
 

@@ -2,9 +2,9 @@
 # Tier-1 verification: the full test suite, fail-fast, from the repo root
 # (includes the kernel interpret-mode sweeps and the compiled-backend
 # equivalence tests), then the benchmark smoke runs which emit
-# BENCH_backend.json, BENCH_serving.json and BENCH_dataflow.json, then
-# the perf-regression gate comparing them against the committed
-# benchmarks/baselines/.
+# BENCH_backend.json, BENCH_serving.json, BENCH_dataflow.json and
+# BENCH_qat.json, then the perf-regression gate comparing them against
+# the committed benchmarks/baselines/.
 #   bash scripts/tier1.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,6 +15,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_serving.py \
     --quick --out BENCH_serving.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_dataflow.py \
     --quick --out BENCH_dataflow.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_qat.py \
+    --quick --out BENCH_qat.json
 # CHECK_BENCH_ARGS lets CI widen the absolute-timing envelope for runner
 # hardware that differs from the baseline machine (ratios/exacts still gate)
 python scripts/check_bench.py ${CHECK_BENCH_ARGS:-}

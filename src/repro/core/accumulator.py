@@ -53,6 +53,25 @@ def exact_worst_case_bits(K: int, x_lo: int, x_hi: int,
     return int(np.ceil(np.log2(max(m, 2)))) + 1
 
 
+def channel_worst_case_bits(q: np.ndarray, x_lo: int, x_hi: int
+                            ) -> np.ndarray:
+    """Per-output-channel refinement of :func:`exact_worst_case_bits` for
+    *known* integer weights ``q`` of shape (K, M): the worst-case signed
+    accumulator width of each of the M dot products when every input
+    element independently takes any value in ``[x_lo, x_hi]``.
+
+    This is the oracle the accumulator-aware QAT projection
+    (``repro.qat.constraints``) is validated against: for any channel,
+    ``channel_worst_case_bits(q)[j] <= exact_worst_case_bits(K, x_lo,
+    x_hi, q.min(), q.max())`` (the scalar bound forgets which channel a
+    weight belongs to), and both use the §4.2 bit formula."""
+    q = np.asarray(q, dtype=np.float64)
+    z_hi = np.maximum(q * x_lo, q * x_hi).sum(axis=0)
+    z_lo = np.minimum(q * x_lo, q * x_hi).sum(axis=0)
+    m = np.maximum(np.abs(z_lo), np.abs(z_hi) + 1.0)
+    return (np.ceil(np.log2(np.maximum(m, 2.0))) + 1).astype(np.int64)
+
+
 def sira_bits(r: ScaledIntRange) -> int:
     return r.required_signed_bits()
 

@@ -8,7 +8,7 @@ from the masters each step — the standard large-model recipe.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,12 @@ class AdamW:
     warmup_steps: int = 100
     total_steps: int = 10000
     min_lr_frac: float = 0.1
+    # Optional post-step projection onto a constraint set (pytree ->
+    # pytree, jit-traceable).  Applied to the f32 *master* weights — the
+    # params handed back each step are re-materialized from the masters,
+    # so projecting params alone would be undone on the next update.
+    # Used by repro.qat for A2Q accumulator-budget projection.
+    project: Optional[Callable[[Any], Any]] = None
 
     def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
         step = step.astype(jnp.float32)
@@ -77,6 +83,8 @@ class AdamW:
                              + self.weight_decay * p)
 
         master = jax.tree.map(upd, state.master, m, v)
+        if self.project is not None:
+            master = self.project(master)
         new_params = jax.tree.map(
             lambda mp, p: mp.astype(p.dtype), master, params)
         return new_params, AdamWState(step=step, master=master, m=m, v=v)

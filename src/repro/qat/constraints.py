@@ -1,0 +1,289 @@
+"""A2Q-style accumulator-budget constraints for QAT (PAPERS.md: A2Q,
+A2Q+): train weights that *provably* fit a chosen accumulator width.
+
+Setting
+-------
+A dot-product layer accumulates ``z[j] = sum_k q[k, j] * x[k]`` with
+integer inputs ``x`` and per-output-channel integer weights
+``q = toz(W / s)`` (round-toward-zero, frozen per-channel scale ``s``).
+``z`` fits ``P`` signed bits iff (repro.core.intervals
+``required_signed_bits``)
+
+    z_hi <= 2^(P-1) - 1   and   -z_lo <= 2^(P-1).
+
+Unsigned N-bit inputs, ``x in [0, M]`` with ``M = 2^N - 1``:
+
+    z_hi = M * sum(q+),   z_lo = -M * sum(q-),
+
+so the budget is a pair of L1-type bounds on the weight column masses:
+
+    sum(q+) <= (2^(P-1) - 1) / M,     sum(q-) <= 2^(P-1) / M.
+
+* **A2Q** (``zero_center=False``) uses the symmetric tight side:
+  ``||q||_1 <= (2^(P-1) - 1) / M``.
+* **A2Q+** (``zero_center=True``) zero-centers ``v = W/s`` per channel
+  and constrains the positive and negative masses *separately* —
+  roughly twice the feasible mass for the same budget.
+
+Signed N-bit inputs (``|x| <= M = 2^(N-1)``): either input sign can
+flip every product, so both bounds collapse to ``M * ||q||_1`` and only
+the symmetric form applies (zero-centering then still conditions the
+weights but buys no extra mass).
+
+The guarantee survives quantization because round-toward-zero gives
+``|q_k| <= |v_k|`` element-wise (``QuantSpec(rounding="toward_zero")``)
+and clipping to ``qmax`` only shrinks magnitudes — so any bound proved
+on ``v = W/s`` transfers to ``q``.  It is enforced as (a) a
+differentiable L1 hinge penalty inside the loss and (b) a hard
+Euclidean projection applied to the optimizer's master weights after
+every step (``AdamW(project=...)``), and it is validated against
+``repro.core.accumulator`` (``exact_worst_case_bits`` /
+``channel_worst_case_bits``) as the oracle — including a seeded
+"lying projector" mode the fuzzer must catch, mirroring
+``repro.core.fuzz``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accumulator import (channel_worst_case_bits,
+                                    exact_worst_case_bits)
+from repro.quant.quantizer import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulatorBudget:
+    """Per-layer accumulator-budget: prove ``<= bits`` signed bits for a
+    dot product over ``input_bits``-bit integer inputs."""
+    bits: int                      # target accumulator width P (signed)
+    input_bits: int = 8            # N: width of the dynamic input
+    input_signed: bool = False
+    zero_center: bool = False      # A2Q+ asymmetric variant
+
+    def __post_init__(self) -> None:
+        if self.bits < 2:
+            raise ValueError(f"accumulator budget needs bits >= 2, "
+                             f"got {self.bits}")
+
+    @property
+    def input_mag(self) -> int:
+        """Worst-case |x| of the integer input."""
+        if self.input_signed:
+            return 2 ** (self.input_bits - 1)
+        return 2 ** self.input_bits - 1
+
+    def input_range(self) -> Tuple[int, int]:
+        """Integer input range (x_lo, x_hi) the budget defends against."""
+        if self.input_signed:
+            return -(2 ** (self.input_bits - 1)), \
+                2 ** (self.input_bits - 1) - 1
+        return 0, 2 ** self.input_bits - 1
+
+    def caps(self) -> Tuple[float, float]:
+        """(cap_pos, cap_neg) L1 limits on the integer-weight column
+        masses.  ``cap_neg < 0`` signals the symmetric regime (bound
+        ``||q||_1 <= cap_pos`` instead of separate masses)."""
+        cap_pos = (2.0 ** (self.bits - 1) - 1.0) / self.input_mag
+        if self.zero_center and not self.input_signed:
+            return cap_pos, (2.0 ** (self.bits - 1)) / self.input_mag
+        return cap_pos, -1.0
+
+
+def _project_l1_nonneg(u: jnp.ndarray, radius: float) -> jnp.ndarray:
+    """Euclidean projection of each *column* of the non-negative matrix
+    ``u`` (K, M) onto ``{y >= 0 : sum(y) <= radius}`` (Duchi et al.
+    sort-and-threshold; jit/vmap-friendly, no data-dependent shapes)."""
+    K = u.shape[0]
+    s = -jnp.sort(-u, axis=0)                       # descending
+    css = jnp.cumsum(s, axis=0)
+    k = jnp.arange(1, K + 1, dtype=u.dtype)[:, None]
+    theta_k = (css - radius) / k
+    rho = jnp.maximum(jnp.sum(s > theta_k, axis=0), 1)
+    theta = jnp.take_along_axis(theta_k, (rho - 1)[None, :], axis=0)[0]
+    # feasible columns have theta <= 0: clamp so they project to themselves
+    theta = jnp.maximum(theta, 0.0)
+    return jnp.maximum(u - theta[None, :], 0.0)
+
+
+def _int_domain(W: jnp.ndarray, scale) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    s = jnp.asarray(scale, dtype=W.dtype)
+    if s.ndim == 1:
+        s = s[None, :]
+    return W / s, s
+
+
+def project_weights(W: jnp.ndarray, scale,
+                    budget: AccumulatorBudget) -> jnp.ndarray:
+    """Hard Euclidean projection of a (K, M) weight matrix onto the
+    budget's constraint set, in integer units ``v = W / scale``
+    (``scale``: per-output-channel, broadcastable to (1, M)).
+
+    Symmetric regime: project ``|v|`` columns onto the L1 ball (signs
+    kept) — the exact Euclidean projection onto ``||v||_1 <= cap``.
+    A2Q+ regime: zero-center each column (reparameterization, as in
+    A2Q+), then project the positive and negative parts onto their own
+    simplex caps; the parts live on disjoint coordinates, so this is
+    the exact projection onto the pair constraint."""
+    v, s = _int_domain(W, scale)
+    cap_pos, cap_neg = budget.caps()
+    if cap_neg >= 0.0:
+        v = v - jnp.mean(v, axis=0, keepdims=True)
+        pos = _project_l1_nonneg(jnp.maximum(v, 0.0), cap_pos)
+        neg = _project_l1_nonneg(jnp.maximum(-v, 0.0), cap_neg)
+        v = pos - neg
+    else:
+        mag = _project_l1_nonneg(jnp.abs(v), cap_pos)
+        v = jnp.sign(v) * mag
+    return v * s
+
+
+def budget_penalty(W: jnp.ndarray, scale,
+                   budget: AccumulatorBudget) -> jnp.ndarray:
+    """Differentiable L1-norm hinge penalty: mean squared excess of the
+    per-channel integer-domain column masses over the budget caps.
+    Zero on the feasible set, so it never fights the projection."""
+    v, _ = _int_domain(W, scale)
+    cap_pos, cap_neg = budget.caps()
+    if cap_neg >= 0.0:
+        v = v - jnp.mean(v, axis=0, keepdims=True)
+        e_pos = jnp.maximum(
+            jnp.sum(jnp.maximum(v, 0.0), axis=0) - cap_pos, 0.0)
+        e_neg = jnp.maximum(
+            jnp.sum(jnp.maximum(-v, 0.0), axis=0) - cap_neg, 0.0)
+        return jnp.mean(e_pos ** 2 + e_neg ** 2)
+    excess = jnp.maximum(
+        jnp.sum(jnp.abs(v), axis=0) - cap_pos, 0.0)
+    return jnp.mean(excess ** 2)
+
+
+def weight_quant_spec(weight_bits: int) -> QuantSpec:
+    """The toz weight quantizer every constrained layer must use (the
+    |q| <= |v| property is what transfers the L1 bound to integers)."""
+    return QuantSpec(bits=weight_bits, signed=True,
+                     granularity="per_channel", channel_axis=-1,
+                     rounding="toward_zero")
+
+
+def quantize_weights(W, scale, weight_bits: int) -> np.ndarray:
+    """(K, M) float weights -> integer q, the float64 numpy reference of
+    the toz quantizer (``quantize_int`` with rounding="toward_zero") —
+    used by export and the fuzzer so proofs run at full precision."""
+    spec = weight_quant_spec(weight_bits)
+    s = np.asarray(scale, np.float64)
+    if s.ndim == 1:
+        s = s[None, :]
+    q = np.trunc(np.asarray(W, np.float64) / s)
+    return np.clip(q, spec.qmin, spec.qmax)
+
+
+def worst_case_inputs(q: np.ndarray, budget: AccumulatorBudget,
+                      maximize: bool = True) -> np.ndarray:
+    """The adversarial integer input per output channel: X (K, M) where
+    column j maximizes (or minimizes) channel j's accumulator
+    ``sum_k q[k, j] * X[k, j]``."""
+    x_lo, x_hi = budget.input_range()
+    if maximize:
+        return np.where(np.asarray(q) > 0, x_hi, x_lo).astype(np.float64)
+    return np.where(np.asarray(q) > 0, x_lo, x_hi).astype(np.float64)
+
+
+def channel_bits(q: np.ndarray, budget: AccumulatorBudget) -> np.ndarray:
+    """Exact per-channel worst-case accumulator bits of integer weights
+    ``q`` under the budget's input range (the core oracle)."""
+    return channel_worst_case_bits(np.asarray(q), *budget.input_range())
+
+
+# --------------------------------------------------------------------------
+# guarantee fuzzer (mirrors repro.core.fuzz: honest run must be clean,
+# seeded lying variants must be caught)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProjectionFuzzReport:
+    cases: int
+    channels_checked: int
+    violations: List[str]
+    oracle_mismatches: List[str]
+
+    @property
+    def clean(self) -> bool:
+        return not self.violations and not self.oracle_mismatches
+
+    def summary(self) -> str:
+        return (f"{self.cases} cases / {self.channels_checked} channels: "
+                f"{len(self.violations)} budget violations, "
+                f"{len(self.oracle_mismatches)} oracle mismatches")
+
+
+def fuzz_projection(n_cases: int = 40, seed: int = 0,
+                    lie: Optional[str] = None) -> ProjectionFuzzReport:
+    """Differential fuzz of the A2Q guarantee: random layers -> project
+    -> toz-quantize -> the exact worst case (both the closed-form oracle
+    and a concrete adversarial input) must fit the budget.
+
+    ``lie`` injects a deliberately unsound projector that a sound
+    checker must flag (mirroring core.fuzz's lying certifier):
+      * ``"loose"`` — projects against a 2-bit-looser budget;
+      * ``"skip"``  — does not project at all.
+    """
+    if lie not in (None, "loose", "skip"):
+        raise ValueError(f"unknown lie mode {lie!r}")
+    rng = np.random.default_rng(seed)
+    violations: List[str] = []
+    mismatches: List[str] = []
+    channels = 0
+    for case in range(n_cases):
+        K = int(rng.integers(4, 48))
+        M = int(rng.integers(2, 12))
+        wbits = int(rng.integers(3, 9))
+        budget = AccumulatorBudget(
+            bits=int(rng.integers(6, 15)),
+            input_bits=int(rng.integers(2, 9)),
+            input_signed=bool(rng.integers(2)),
+            zero_center=bool(rng.integers(2)))
+        W = rng.normal(size=(K, M)) * rng.uniform(0.5, 3.0)
+        scale = np.maximum(
+            np.abs(W).max(axis=0) / (2 ** (wbits - 1) - 1), 1e-8)
+        if lie == "skip":
+            Wp = W
+        else:
+            target = budget if lie is None else dataclasses.replace(
+                budget, bits=budget.bits + 2)
+            Wp = np.asarray(project_weights(
+                jnp.asarray(W), jnp.asarray(scale), target))
+        q = quantize_weights(Wp, scale, wbits)
+        bits = channel_bits(q, budget)
+        channels += M
+        # the per-channel oracle must be consistent with the scalar
+        # range oracle and with a concrete adversarial execution
+        x_lo, x_hi = budget.input_range()
+        scalar = exact_worst_case_bits(K, x_lo, x_hi,
+                                       int(q.min()), int(q.max()))
+        if np.any(bits > scalar):
+            mismatches.append(
+                f"case {case}: channel bits {bits.max()} exceed scalar "
+                f"oracle {scalar}")
+        z_hi = (q * worst_case_inputs(q, budget, True)).sum(axis=0)
+        z_lo = (q * worst_case_inputs(q, budget, False)).sum(axis=0)
+        m = np.maximum(np.abs(z_lo), np.abs(z_hi) + 1.0)
+        concrete = np.ceil(np.log2(np.maximum(m, 2.0))) + 1
+        if np.any(concrete != bits):
+            # the adversarial input achieves the oracle's extremes, so
+            # the concrete bit count must match exactly
+            mismatches.append(
+                f"case {case}: concrete worst case disagrees with "
+                f"channel_worst_case_bits")
+        if np.any(bits > budget.bits):
+            violations.append(
+                f"case {case}: K={K} M={M} w{wbits} "
+                f"N={budget.input_bits}{'s' if budget.input_signed else 'u'}"
+                f"{' zc' if budget.zero_center else ''} budget "
+                f"{budget.bits} -> proven {int(bits.max())} bits"
+                + (f" (lie={lie})" if lie else ""))
+    return ProjectionFuzzReport(cases=n_cases, channels_checked=channels,
+                                violations=violations,
+                                oracle_mismatches=mismatches)

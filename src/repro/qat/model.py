@@ -1,0 +1,187 @@
+"""Small quantized MLP classifier driven by the accumulator-aware QAT
+loop — the "training knob" end of the train -> SIRA -> DSE chain.
+
+Implements the model protocol ``make_train_step`` expects
+(``init(key)`` and ``loss(params, x, labels, frontend_embed, quant=...,
+remat=...)``), with:
+
+  * fake-quant forward passes from ``repro.quant.quantizer`` — unsigned
+    input/activation quantizers, per-output-channel **round-toward-zero**
+    weight quantizers (the rounding mode the A2Q guarantee needs);
+  * **frozen** quantization scales, computed once at construction from
+    the init weights / a calibration batch.  Freezing is load-bearing:
+    the projection, the penalty, and the exported SIRA graph must all
+    measure weights against the *same* scale, or the L1 bound proven on
+    ``W/s`` stops meaning anything about the deployed integers;
+  * per-layer :class:`~repro.qat.constraints.AccumulatorBudget` when
+    ``budget_bits > 0``: an L1 hinge penalty inside the loss plus a
+    ``make_projector()`` pytree hook for ``AdamW(project=...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.quantizer import QuantSpec, fake_quant
+from .constraints import (AccumulatorBudget, budget_penalty,
+                          project_weights, weight_quant_spec)
+
+
+class QATMLP:
+    """ReLU MLP with quantized input/weights/activations and an optional
+    accumulator budget on every layer."""
+
+    def __init__(self, in_dim: int = 16, hidden=(32,), classes: int = 4,
+                 weight_bits: int = 4, act_bits: int = 4,
+                 input_bits: int = 8, budget_bits: int = 0,
+                 zero_center: bool = False, lam: float = 1e-2,
+                 seed: int = 0):
+        self.in_dim = in_dim
+        self.hidden = tuple(hidden)
+        self.classes = classes
+        self.weight_bits = weight_bits
+        self.act_bits = act_bits
+        self.input_bits = input_bits
+        self.budget_bits = budget_bits
+        self.zero_center = zero_center
+        self.lam = lam
+        self.seed = seed
+
+        dims = [in_dim] + list(self.hidden) + [classes]
+        self.layer_dims = list(zip(dims[:-1], dims[1:]))
+        self.w_spec = weight_quant_spec(weight_bits)
+        self.in_spec = QuantSpec(bits=input_bits, signed=False)
+        self.act_spec = QuantSpec(bits=act_bits, signed=False)
+        # inputs live in [0, 1]; this scale puts the integer grid exactly
+        # on [0, 2^N - 1] so SIRA sees a pure unsigned N-bit input
+        self.input_scale = 1.0 / (2 ** input_bits - 1)
+
+        # deterministic class centers for the synthetic task
+        rng = np.random.default_rng(seed + 7)
+        self._centers = rng.uniform(0.25, 0.75, size=(classes, in_dim))
+
+        # frozen per-output-channel weight scales from the init weights,
+        # with 2x headroom so training can grow weights before the
+        # clipped STE saturates
+        init = self._raw_init(jax.random.PRNGKey(seed))
+        self.w_scales: List[np.ndarray] = [
+            np.maximum(np.abs(np.asarray(l["W"], np.float64)).max(axis=0)
+                       * 2.0 / self.w_spec.qmax, 1e-8)
+            for l in init["layers"]]
+        # frozen per-tensor activation scales from a calibration pass
+        self.a_scales: List[float] = self._calibrate(init)
+
+    # ------------------------------------------------------------- budgets
+    def budgets(self) -> List[Optional[AccumulatorBudget]]:
+        """Per-layer accumulator budgets (None when unconstrained).
+        Layer 0 accumulates the quantized input, deeper layers the
+        unsigned activation quantizer output."""
+        if not self.budget_bits:
+            return [None] * len(self.layer_dims)
+        out: List[Optional[AccumulatorBudget]] = []
+        for i in range(len(self.layer_dims)):
+            n = self.input_bits if i == 0 else self.act_bits
+            out.append(AccumulatorBudget(
+                bits=self.budget_bits, input_bits=n, input_signed=False,
+                zero_center=self.zero_center))
+        return out
+
+    def make_projector(self):
+        """Pytree -> pytree hard projection onto every layer's budget,
+        suitable for ``AdamW(project=...)`` (jit-traceable; applied to
+        the f32 master weights after each optimizer step)."""
+        budgets = self.budgets()
+        scales = [jnp.asarray(s, jnp.float32)[None, :]
+                  for s in self.w_scales]
+
+        def proj(params: Dict[str, Any]) -> Dict[str, Any]:
+            layers = []
+            for layer, s, b in zip(params["layers"], scales, budgets):
+                if b is None:
+                    layers.append(dict(layer))
+                else:
+                    layers.append(
+                        {**layer, "W": project_weights(layer["W"], s, b)})
+            return {**params, "layers": layers}
+
+        return proj
+
+    # ---------------------------------------------------------------- init
+    def _raw_init(self, key) -> Dict[str, Any]:
+        layers = []
+        for i, (k, m) in enumerate(self.layer_dims):
+            key, sub = jax.random.split(key)
+            layers.append({
+                "W": jax.random.normal(sub, (k, m), jnp.float32)
+                / jnp.sqrt(jnp.asarray(float(k), jnp.float32)),
+                "b": jnp.zeros((m,), jnp.float32)})
+        return {"layers": layers}
+
+    def init(self, key) -> Dict[str, Any]:
+        """Init params; already projected onto the budget set so step 0
+        satisfies the constraint (AdamW copies these into its masters)."""
+        params = self._raw_init(key)
+        if self.budget_bits:
+            params = self.make_projector()(params)
+        return params
+
+    def _calibrate(self, params) -> List[float]:
+        x = jnp.asarray(self.synth_batch(0, 256)["tokens"])
+        h = fake_quant(x, self.input_scale, 0.0, self.in_spec)
+        scales: List[float] = []
+        for i, layer in enumerate(params["layers"][:-1]):
+            s_w = jnp.asarray(self.w_scales[i], jnp.float32)[None, :]
+            wq = fake_quant(layer["W"], s_w, 0.0, self.w_spec)
+            h = jax.nn.relu(h @ wq + layer["b"])
+            s = max(float(jnp.max(h)), 1e-6) * 2.0 / self.act_spec.qmax
+            scales.append(s)
+            h = fake_quant(h, s, 0.0, self.act_spec)
+        return scales
+
+    # ------------------------------------------------------------- forward
+    def apply(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        h = fake_quant(x, self.input_scale, 0.0, self.in_spec)
+        n = len(params["layers"])
+        for i, layer in enumerate(params["layers"]):
+            s_w = jnp.asarray(self.w_scales[i], h.dtype)[None, :]
+            wq = fake_quant(layer["W"], s_w, 0.0, self.w_spec)
+            h = h @ wq + layer["b"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+                h = fake_quant(h, self.a_scales[i], 0.0, self.act_spec)
+        return h
+
+    def loss(self, params, x, labels, frontend_embed=None, *,
+             quant=None, remat: bool = True) -> jnp.ndarray:
+        """Cross-entropy + the differentiable accumulator-budget penalty
+        (``quant``/``remat``/``frontend_embed`` accepted for the
+        make_train_step protocol; quantization here is structural)."""
+        del frontend_embed, quant, remat
+        logits = self.apply(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.mean(
+            jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                                axis=1))
+        pen = jnp.zeros((), jnp.float32)
+        for layer, s, b in zip(params["layers"], self.w_scales,
+                               self.budgets()):
+            if b is not None:
+                pen = pen + budget_penalty(
+                    layer["W"], jnp.asarray(s, jnp.float32)[None, :], b)
+        return ce + self.lam * pen
+
+    # ---------------------------------------------------------------- data
+    def synth_batch(self, step: int, batch: int) -> Dict[str, np.ndarray]:
+        """Deterministic synthetic classification batch: Gaussian blobs
+        around per-class centers, clipped to the quantizer's [0, 1]
+        input box.  Keyed by (seed, step) so resumed runs replay the
+        exact data stream (bit-identical-resume tests rely on this)."""
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        labels = rng.integers(self.classes, size=batch)
+        x = self._centers[labels] + rng.normal(
+            0.0, 0.08, size=(batch, self.in_dim))
+        return {"tokens": np.clip(x, 0.0, 1.0).astype(np.float32),
+                "labels": labels.astype(np.int32)}

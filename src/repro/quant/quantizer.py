@@ -24,6 +24,7 @@ class QuantSpec:
     group_size: int = 32
     pot: bool = False                 # power-of-two scale restriction
     symmetric: bool = True            # zero_point == 0
+    rounding: str = "nearest"         # nearest | toward_zero
 
     @property
     def qmin(self) -> int:
@@ -77,8 +78,19 @@ def compute_scale(x: jnp.ndarray, spec: QuantSpec,
 
 def quantize_int(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
                  spec: QuantSpec) -> jnp.ndarray:
-    """g ∘ f⁻¹: real → clipped integer (float dtype carrier)."""
-    q = jnp.round(x / scale + zero_point)
+    """g ∘ f⁻¹: real → clipped integer (float dtype carrier).
+
+    ``rounding="toward_zero"`` truncates instead of rounding to nearest,
+    which guarantees |q| <= |x/scale| element-wise — the property the
+    accumulator-aware QAT projection (repro.qat) relies on to turn an
+    L1 bound on x/scale into an L1 bound on the quantized integers."""
+    u = x / scale + zero_point
+    if spec.rounding == "toward_zero":
+        q = jnp.trunc(u)
+    elif spec.rounding == "nearest":
+        q = jnp.round(u)
+    else:
+        raise ValueError(f"unknown rounding mode: {spec.rounding!r}")
     return jnp.clip(q, spec.qmin, spec.qmax)
 
 

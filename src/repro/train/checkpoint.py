@@ -68,9 +68,27 @@ def latest_checkpoint(directory: str) -> Optional[str]:
 
 def restore_checkpoint(path: str, state_like: Any
                        ) -> Tuple[Any, Dict[str, Any]]:
-    """Restore into the structure of ``state_like`` (treedef template)."""
+    """Restore into the structure of ``state_like`` (treedef template).
+
+    The saved treedef / leaf count / leaf shapes are validated against the
+    template: leaves are stored positionally, so restoring into a state
+    with a different structure (e.g. a constrained-QAT state into a plain
+    trainer, or a different model width) would silently assign tensors to
+    the wrong slots.  Mismatches raise ``ValueError`` instead."""
     data = np.load(path, allow_pickle=False)
     leaves, treedef = jax.tree.flatten(state_like)
+    if "__treedef__" in data:
+        saved_td = bytes(data["__treedef__"]).decode()
+        if saved_td != str(treedef):
+            raise ValueError(
+                f"checkpoint {path} was saved with a different state "
+                f"structure; leaves are positional so restoring would "
+                f"scramble them.\n  saved:    {saved_td}\n"
+                f"  template: {treedef}")
+    if "__nleaves__" in data and int(data["__nleaves__"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint {path} holds {int(data['__nleaves__'])} leaves "
+            f"but the template has {len(leaves)}")
     none_mask = data["__none_mask__"]
     out = []
     for i, leaf in enumerate(leaves):
@@ -78,6 +96,12 @@ def restore_checkpoint(path: str, state_like: Any
             out.append(None)
         else:
             arr = data[f"leaf_{i}"]
+            if leaf is not None and hasattr(leaf, "shape") and \
+                    tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"checkpoint {path} leaf {i}: saved shape "
+                    f"{tuple(arr.shape)} != template shape "
+                    f"{tuple(np.shape(leaf))}")
             if leaf is not None and hasattr(leaf, "dtype"):
                 arr = arr.astype(leaf.dtype)
             out.append(arr)

@@ -1,0 +1,296 @@
+"""Accumulator-aware QAT subsystem (repro.qat): projection geometry, the
+A2Q guarantee against the core accumulator oracle (incl. the lying
+projector the fuzzer must catch), the jitted train loop with per-step
+projection + bit-identical checkpoint resume, and the end-to-end chain
+QAT -> export -> build_flow -> proven bits <= budget -> DSE monotone.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accumulator import (channel_worst_case_bits,
+                                    exact_worst_case_bits)
+from repro.qat import (AccumulatorBudget, QATConfig, QATMLP,
+                       check_budget_invariant, channel_bits,
+                       export_qat_model, fuzz_projection,
+                       project_weights, proven_layer_bits,
+                       quantize_weights, run_qat, worst_case_inputs)
+from repro.quant.quantizer import QuantSpec, quantize_int
+
+
+# --------------------------------------------------------------- projection
+
+def _rand_layer(seed, K=24, M=6, wbits=4):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(K, M)) * rng.uniform(0.5, 2.0)
+    scale = np.maximum(np.abs(W).max(axis=0) / (2 ** (wbits - 1) - 1),
+                       1e-8)
+    return W, scale
+
+
+def test_projection_feasible_is_identity():
+    """Weights already inside the constraint set pass through unchanged."""
+    W, scale = _rand_layer(0)
+    W = W * 1e-3                      # tiny weights: trivially feasible
+    for zc in (False, True):
+        budget = AccumulatorBudget(16, input_bits=4, zero_center=zc)
+        Wp = np.asarray(project_weights(jnp.asarray(W),
+                                        jnp.asarray(scale), budget))
+        if zc:
+            # zero-centering is a reparameterization, not a projection:
+            # only the centered weights are compared
+            W_ref = W - (W / scale).mean(axis=0, keepdims=True) * scale
+            np.testing.assert_allclose(Wp, W_ref, atol=1e-7)
+        else:
+            np.testing.assert_allclose(Wp, W, atol=1e-7)
+
+
+def test_projection_satisfies_caps_and_is_nonexpansive():
+    for seed in range(10):
+        W, scale = _rand_layer(seed)
+        for zc in (False, True):
+            budget = AccumulatorBudget(8, input_bits=6, zero_center=zc)
+            Wp = np.asarray(project_weights(
+                jnp.asarray(W), jnp.asarray(scale), budget))
+            v = Wp / scale
+            cap_pos, cap_neg = budget.caps()
+            assert np.all(np.maximum(v, 0).sum(0) <= cap_pos + 1e-4)
+            if cap_neg >= 0:
+                assert np.all(np.maximum(-v, 0).sum(0) <= cap_neg + 1e-4)
+            else:
+                assert np.all(np.abs(v).sum(0) <= cap_pos + 1e-4)
+            # projection never grows a coordinate's magnitude (after the
+            # optional centering) and never flips signs
+            v0 = W / scale
+            if zc:
+                v0 = v0 - v0.mean(axis=0, keepdims=True)
+            assert np.all(np.abs(v) <= np.abs(v0) + 1e-6)
+            assert np.all(v * v0 >= -1e-9)
+
+
+def test_projection_jit_and_grad_safe():
+    """The projection must be jit-traceable (it rides inside the train
+    step) and the penalty differentiable."""
+    from repro.qat import budget_penalty
+    W, scale = _rand_layer(3)
+    budget = AccumulatorBudget(8, input_bits=6)
+    f = jax.jit(lambda w: project_weights(w, jnp.asarray(scale), budget))
+    np.testing.assert_allclose(
+        np.asarray(f(jnp.asarray(W, jnp.float32))),
+        np.asarray(project_weights(jnp.asarray(W, jnp.float32),
+                                   jnp.asarray(scale), budget)),
+        rtol=1e-6)
+    g = jax.grad(lambda w: budget_penalty(w, jnp.asarray(scale), budget))(
+        jnp.asarray(W, jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_toz_rounding_never_grows_magnitude():
+    spec = QuantSpec(bits=4, signed=True, rounding="toward_zero")
+    x = jnp.asarray(np.linspace(-9, 9, 301))
+    q = np.asarray(quantize_int(x, 1.0, 0.0, spec))
+    assert np.all(np.abs(q) <= np.abs(np.asarray(x)))
+    with pytest.raises(ValueError):
+        quantize_int(x, 1.0, 0.0,
+                     dataclasses.replace(spec, rounding="bogus"))
+
+
+# ------------------------------------------------- the guarantee vs oracle
+
+def test_projected_weights_fit_budget_exact_oracle():
+    """For random projected matrices and worst-case integer inputs, the
+    core oracle never exceeds the budget (property-based when hypothesis
+    is installed, seeded sweep otherwise)."""
+    hyp = pytest.importorskip("hypothesis", reason="optional dependency")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), K=st.integers(2, 40),
+           M=st.integers(1, 8), wbits=st.integers(2, 8),
+           nbits=st.integers(2, 8), P=st.integers(4, 16),
+           signed=st.booleans(), zc=st.booleans())
+    def prop(seed, K, M, wbits, nbits, P, signed, zc):
+        rng = np.random.default_rng(seed)
+        W = rng.normal(size=(K, M)) * rng.uniform(0.1, 4.0)
+        scale = np.maximum(
+            np.abs(W).max(axis=0) / (2 ** (wbits - 1) - 1), 1e-8)
+        budget = AccumulatorBudget(P, input_bits=nbits,
+                                   input_signed=signed, zero_center=zc)
+        Wp = project_weights(jnp.asarray(W), jnp.asarray(scale), budget)
+        q = quantize_weights(np.asarray(Wp), scale, wbits)
+        assert np.all(channel_bits(q, budget) <= P)
+        # concrete adversarial input agrees
+        z = (q * worst_case_inputs(q, budget, True)).sum(axis=0)
+        assert np.all(z <= 2.0 ** (P - 1) - 1)
+        z = (q * worst_case_inputs(q, budget, False)).sum(axis=0)
+        assert np.all(-z <= 2.0 ** (P - 1))
+
+    prop()
+    del hyp
+
+
+def test_fuzz_projection_honest_clean():
+    rep = fuzz_projection(30, seed=1)
+    assert rep.clean, rep.violations[:3] + rep.oracle_mismatches[:3]
+    assert rep.channels_checked > 0
+
+
+@pytest.mark.parametrize("lie", ["loose", "skip"])
+def test_fuzz_projection_catches_lying_projector(lie):
+    """A deliberately unsound projector must be flagged — if the checker
+    can't see the lie, a real soundness bug would pass silently too."""
+    rep = fuzz_projection(30, seed=1, lie=lie)
+    assert rep.violations, f"lying projector ({lie}) went undetected"
+
+
+def test_channel_oracle_vs_scalar_oracle():
+    """channel_worst_case_bits is a refinement of exact_worst_case_bits:
+    never above the scalar bound, equal when every channel contains the
+    extreme weight pattern."""
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        K, M = int(rng.integers(2, 30)), int(rng.integers(1, 6))
+        q = rng.integers(-7, 8, size=(K, M))
+        x_lo, x_hi = sorted(rng.integers(-64, 64, size=2).tolist())
+        bits = channel_worst_case_bits(q, x_lo, x_hi)
+        scalar = exact_worst_case_bits(K, x_lo, x_hi,
+                                       int(q.min()), int(q.max()))
+        assert np.all(bits <= scalar)
+    # uniform extreme weights: the refinement collapses to the bound
+    q = np.full((16, 3), 7.0)
+    assert np.all(channel_worst_case_bits(q, 0, 15)
+                  == exact_worst_case_bits(16, 0, 15, 7, 7))
+
+
+# ----------------------------------------------------------------- training
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = QATConfig(budget=12, steps=50, hidden=(24,), seed=0)
+    return run_qat(cfg)
+
+
+def test_qat_loss_decreases(trained):
+    losses = trained.losses
+    assert np.mean(losses[-8:]) < np.mean(losses[:8]), losses
+
+
+def test_projection_enforced_every_step(trained):
+    """After training, params AND optimizer masters sit inside the
+    constraint set (the projection targets the masters; params are
+    re-materialized from them)."""
+    model = trained.model
+    for params in (trained.state.params, trained.state.opt.master):
+        for i, (layer, budget) in enumerate(zip(params["layers"],
+                                                model.budgets())):
+            v = np.asarray(layer["W"]) / model.w_scales[i]
+            cap_pos, cap_neg = budget.caps()
+            if cap_neg >= 0:
+                assert np.all(np.maximum(v, 0).sum(0) <= cap_pos + 1e-3)
+                assert np.all(np.maximum(-v, 0).sum(0) <= cap_neg + 1e-3)
+            else:
+                assert np.all(np.abs(v).sum(0) <= cap_pos + 1e-3)
+
+
+def test_qat_checkpoint_resume_bitexact(tmp_path):
+    """Train 6 steps straight == kill after the step-3 checkpoint +
+    fresh-process resume, bit-identical — for a *constrained* state
+    (projection inside the step, masters carrying the constraint)."""
+    import shutil
+
+    cfg = QATConfig(budget=12, steps=6, hidden=(16,), seed=1,
+                    ckpt_dir=str(tmp_path / "a"), ckpt_every=3)
+    straight = run_qat(cfg)
+
+    # simulate the crash: a fresh directory holding only the step-3
+    # checkpoint, then a fresh run_qat (new model, new jit) resumes it
+    (tmp_path / "b").mkdir()
+    shutil.copy(tmp_path / "a" / "ckpt_00000003.npz", tmp_path / "b")
+    resumed = run_qat(dataclasses.replace(cfg,
+                                          ckpt_dir=str(tmp_path / "b")))
+    assert resumed.resumed_from == 3
+    assert resumed.losses[:3] == straight.losses[:3]
+
+    for a, b in zip(jax.tree.leaves(straight.state.params),
+                    jax.tree.leaves(resumed.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- export + DSE
+
+def test_export_graph_matches_training_forward(trained):
+    """The exported graph (snapped weights, f64 executor) agrees with a
+    float64 reference of the fake-quant forward, and its integer weights
+    are exactly the toz integers training constrained."""
+    model, params = trained.model, trained.state.params
+    sm = export_qat_model(model, params)
+    # graph Quant recovers exactly trunc(W/s) for every layer
+    for i in range(len(model.layer_dims)):
+        W_snap = sm.graph.initializers[f"l{i}_W"]
+        q_ref = quantize_weights(np.asarray(params["layers"][i]["W"]),
+                                 model.w_scales[i], model.weight_bits)
+        out = sm.execute({"X": np.zeros((1, model.in_dim))},
+                         want=[f"l{i}_Wq"])
+        # compare in integer space; the division reintroduces ~1 ulp
+        got = out[f"l{i}_Wq"] / model.w_scales[i]
+        np.testing.assert_allclose(got, q_ref, atol=1e-6)
+        np.testing.assert_array_equal(np.round(got), q_ref)
+        np.testing.assert_allclose(W_snap, q_ref * model.w_scales[i])
+    # end-to-end logits: f64 numpy reference of the fake-quant forward
+    x = model.synth_batch(123, 8)["tokens"].astype(np.float64)
+    h = np.clip(np.round(x / model.input_scale), 0,
+                2 ** model.input_bits - 1) * model.input_scale
+    n = len(model.layer_dims)
+    for i in range(n):
+        q = quantize_weights(np.asarray(params["layers"][i]["W"]),
+                             model.w_scales[i], model.weight_bits)
+        h = h @ (q * model.w_scales[i][None, :]) \
+            + np.asarray(params["layers"][i]["b"], np.float64)
+        if i < n - 1:
+            s = model.a_scales[i]
+            h = np.maximum(h, 0.0)
+            h = np.clip(np.round(h / s), 0, 2 ** model.act_bits - 1) * s
+    got = sm.execute({"X": x})[sm.graph.outputs[0]]
+    np.testing.assert_allclose(got, h, rtol=1e-9, atol=1e-9)
+
+
+def test_end_to_end_budget_chain():
+    """The acceptance-criteria chain in one test: QAT at budget B ->
+    export -> build_flow -> proven bits <= B on every constrained layer
+    -> DSE LUT/DSP monotone non-increasing as B tightens."""
+    from repro.dataflow import compare_sira_vs_baseline
+    prev_luts, prev_dsps = None, None
+    for budget in (14, 12, 10):
+        res = run_qat(QATConfig(budget=budget, steps=40, hidden=(24,),
+                                seed=2))
+        result, bits = proven_layer_bits(res.model, res.state.params)
+        checked = check_budget_invariant(res.model, res.state.params,
+                                         bits)
+        assert all(b <= budget for b in checked)
+        comp = compare_sira_vs_baseline(result.model)
+        if prev_luts is not None:
+            assert comp.sira.luts <= prev_luts + 1e-9
+            assert comp.sira.dsps <= prev_dsps
+        prev_luts, prev_dsps = comp.sira.luts, comp.sira.dsps
+
+
+def test_zero_center_variant_trains_and_holds():
+    res = run_qat(QATConfig(budget=12, steps=40, hidden=(24,), seed=3,
+                            zero_center=True))
+    bits = check_budget_invariant(res.model, res.state.params)
+    assert max(bits) <= 12
+
+
+def test_unconstrained_model_has_no_projection():
+    model = QATMLP(budget_bits=0, hidden=(8,))
+    assert all(b is None for b in model.budgets())
+    from repro.qat import make_optimizer
+    assert make_optimizer(QATConfig(budget=0), model).project is None
+
+
+def test_budget_validation():
+    with pytest.raises(ValueError):
+        AccumulatorBudget(bits=1)

@@ -85,6 +85,31 @@ def test_checkpoint_restart_bitexact(tmp_path):
         np.testing.assert_array_equal(np.asarray(pa), np.asarray(pc))
 
 
+def test_restore_rejects_mismatched_structure(tmp_path):
+    """Leaves are stored positionally: restoring into a template with a
+    different tree structure must raise, not silently scramble tensors
+    (regression — previously the treedef was saved but never checked)."""
+    cfg, model, opt, state, step, pipe = _setup()
+    path = save_checkpoint(str(tmp_path), 0, state)
+    # different structure: compression adds error-feedback leaves
+    bad = init_train_state(model, opt, jax.random.PRNGKey(0),
+                           compress=True)
+    with pytest.raises(ValueError, match="different state structure"):
+        restore_checkpoint(path, bad)
+
+
+def test_restore_rejects_mismatched_shapes(tmp_path):
+    """Same tree structure but different tensor shapes (e.g. a different
+    model width) must raise with the offending leaf named."""
+    cfg, model, opt, state, step, pipe = _setup()
+    path = save_checkpoint(str(tmp_path), 0, state)
+    wrong = jax.tree.map(
+        lambda p: jnp.zeros(p.shape + (2,), p.dtype)
+        if getattr(p, "ndim", 0) == 2 else p, state)
+    with pytest.raises(ValueError, match="template shape"):
+        restore_checkpoint(path, wrong)
+
+
 def test_checkpoint_atomic_and_gc(tmp_path):
     cfg, model, opt, state, step, pipe = _setup()
     for s in range(5):
